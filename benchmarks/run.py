@@ -1,0 +1,250 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (us_per_call = wall time of the benchmarked call on this host;
+# derived = the paper-comparable quantity).
+#
+#   fig7        accuracy vs D_r x split (tiny ResNet, synthetic images)
+#   table4      per-split latency/energy profile via Algorithm 1 profiling
+#   table5      selection phase on the paper's published Table IV -> exact
+#               reproduction of the paper's chosen splits + improvements
+#   sec3d       compression ratios (butterfly vs raw features)
+#   wire        beyond-paper: pod-boundary wire bytes per arch
+#   roofline    aggregated dry-run roofline table (reads experiments/dryrun)
+#   micro       kernel/system microbenchmarks (us/call)
+#
+# Run: PYTHONPATH=src python -m benchmarks.run [names...]
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _timeit(fn, n=3):
+    fn()                                   # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_fig7():
+    """Fig. 7 miniature: accuracy for (split x D_r) on the synthetic task."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "examples"))
+    from train_resnet_butterfly import train_and_eval
+    from repro.configs.resnet50 import resnet50
+
+    base = resnet50().reduced()
+    t0 = time.perf_counter()
+    target = train_and_eval(base, steps=60)
+    rows = []
+    for split in (1, 2):
+        for d_r in (1, 4):
+            acc = train_and_eval(base.with_butterfly(split, d_r), steps=60)
+            rows.append((split, d_r, acc))
+    us = (time.perf_counter() - t0) * 1e6
+    for split, d_r, acc in rows:
+        print(f"fig7/rb{split}_dr{d_r},{us/5:.0f},acc={acc:.3f}(target={target:.3f})")
+    # the paper's qualitative claim: larger D_r never hurts
+    for split in (1, 2):
+        a1 = next(a for s, d, a in rows if s == split and d == 1)
+        a4 = next(a for s, d, a in rows if s == split and d == 4)
+        print(f"fig7/monotone_rb{split},0,larger_dr_better={a4 >= a1 - 0.05}")
+
+
+def bench_table4():
+    """Table IV analogue from the roofline profiler (full ResNet-50)."""
+    from repro.configs.resnet50 import PAPER_MIN_DR, resnet50
+    from repro.core import costs
+    from repro.core.planner import TrainingPhaseResult, profiling_phase
+    from repro.core.profiler import GTX_1080TI, JETSON_TX2
+    from repro.core.wireless import NETWORKS
+
+    cfg = resnet50()
+    trained = [TrainingPhaseResult(s, PAPER_MIN_DR[s], 0.74) for s in range(1, 17)]
+
+    def split_costs(split, d_r):
+        ef, cf, wire = costs.resnet_split_flops(cfg, split, d_r)
+        return ef, ef / 10, cf, cf / 10, wire
+
+    t0 = time.perf_counter()
+    profiles = profiling_phase(trained, split_costs, JETSON_TX2, GTX_1080TI)
+    us = (time.perf_counter() - t0) * 1e6
+    for p in profiles[:4] + profiles[7:8] + profiles[15:]:
+        lat3g = p.latency(NETWORKS["3g"]) * 1e3
+        latwifi = p.latency(NETWORKS["wifi"]) * 1e3
+        print(f"table4/rb{p.split},{us/16:.0f},"
+              f"wire={p.wire_bytes}B lat3g={lat3g:.2f}ms latwifi={latwifi:.2f}ms")
+
+
+def bench_table5():
+    """Selection phase on the paper's OWN published profile: must reproduce
+    Table V exactly (RB8 for 3G, RB1 for 4G/Wi-Fi) + headline factors."""
+    from repro.core.planner import select_from_table
+    from repro.core.profiler import PAPER_CLOUD_ONLY, paper_profiles
+
+    profs = paper_profiles()
+    t0 = time.perf_counter()
+    out = {}
+    for net in ("3g", "4g", "wifi"):
+        for obj in ("latency", "energy"):
+            out[(net, obj)] = select_from_table(profs[net], obj)
+    us = (time.perf_counter() - t0) * 1e6
+    for net in ("3g", "4g", "wifi"):
+        sel = out[(net, "latency")]
+        row = profs[net][sel]
+        lat_x = PAPER_CLOUD_ONLY[net][0] / row["latency_ms"]
+        en_x = PAPER_CLOUD_ONLY[net][1] / row["energy_mj"]
+        print(f"table5/{net},{us/6:.0f},split=RB{sel} lat_x={lat_x:.0f} "
+              f"en_x={en_x:.0f} (paper: RB{'8' if net=='3g' else '1'})")
+    avg_lat = sum(PAPER_CLOUD_ONLY[n][0] / profs[n][out[(n, 'latency')]]["latency_ms"]
+                  for n in ("3g", "4g", "wifi")) / 3
+    avg_en = sum(PAPER_CLOUD_ONLY[n][1] / profs[n][out[(n, 'energy')]]["energy_mj"]
+                 for n in ("3g", "4g", "wifi")) / 3
+    print(f"table5/headline,0,avg_lat_x={avg_lat:.0f}(paper=53) "
+          f"avg_en_x={avg_en:.0f}(paper=68)")
+
+
+def bench_sec3d():
+    """Sec III-D compression ratios."""
+    from repro.configs import get_config
+    from repro.configs.all import ASSIGNED
+    from repro.core.butterfly import compression_ratio
+    # paper: RB1 reduces 256 -> 1 channels = 256x
+    print(f"sec3d/resnet_rb1,0,compression={compression_ratio(256, 1, 8, 8):.0f}x"
+          f"(paper=256x, prior art 3.3x)")
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        d_r = max(8, cfg.d_model // 64)
+        c = compression_ratio(cfg.d_model, d_r, 16, 8)
+        print(f"sec3d/{arch},0,d{cfg.d_model}->dr{d_r} wire_compression={c:.0f}x")
+
+
+def bench_wire():
+    """Beyond-paper: pod-boundary bytes for the split pipeline per arch."""
+    from repro.configs import get_config
+    from repro.serving.pipeline import wire_stats
+
+    for arch in ("qwen3-8b", "gemma3-12b", "zamba2-7b", "xlstm-125m"):
+        base = get_config(arch)
+        cfg = base.with_butterfly(layer=max(1, base.num_layers // 8),
+                                  d_r=max(16, base.d_model // 64))
+        s = wire_stats(cfg, microbatch=8, seq=4096)
+        print(f"wire/{arch},0,wire={s['wire_bytes']/1e6:.2f}MB "
+              f"raw={s['raw_boundary_bytes']/1e6:.2f}MB "
+              f"compression={s['compression']:.1f}x")
+
+
+def bench_roofline():
+    """Aggregate the dry-run artifacts into the section-Roofline table."""
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        print("roofline/none,0,run launch/dryrun first")
+        return
+    rows = []
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(d, f)))
+        if "compute_s" not in rec:
+            continue
+        rows.append(rec)
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']},{r['compile_s']*1e6:.0f},"
+              f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms "
+              f"bottleneck={r['bottleneck']} useful={r['useful_ratio']:.2f}")
+    n_mp = sum(1 for r in rows if r["mesh"] == "2x16x16")
+    print(f"roofline/multi_pod_compiles,0,count={n_mp}")
+
+
+def bench_micro():
+    """Microbenchmarks: butterfly kernel, flash attention, model forward."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    x = jax.random.normal(jax.random.key(0), (1024, 512), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (512, 32), jnp.float32) * 0.05
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.butterfly_reduce_quant(x, w)))
+    print(f"micro/butterfly_reduce_quant_1024x512,{us:.0f},interpret_mode")
+
+    q = jax.random.normal(jax.random.key(2), (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(3), (1, 256, 2, 64), jnp.float32)
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, k, block_q=128, block_k=128)))
+    print(f"micro/flash_attention_256,{us:.0f},interpret_mode")
+
+    cfg = get_config("qwen3-8b").reduced()
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    toks = jnp.ones((4, 128), jnp.int32)
+    fwd = jax.jit(lambda p, t: M.forward_train(p, built, {"tokens": t})[0])
+    us = _timeit(lambda: jax.block_until_ready(fwd(params, toks)))
+    tokps = 4 * 128 / (us / 1e6)
+    print(f"micro/reduced_qwen3_fwd_4x128,{us:.0f},tok_per_s={tokps:,.0f}")
+
+
+def bench_wirebits():
+    """Beyond-paper (the paper's stated future work: 'the extent of reduction
+    ... can be explored'): trade accuracy vs wire precision.  Tiny LM +
+    butterfly trained end-to-end with a 4/8/16-bit wire."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.quantization import wire_bytes
+    from repro.data import lm_batches
+    from repro.models import model as M
+    from repro.training import (AdamWConfig, adamw_init, constant_schedule,
+                                make_train_step)
+
+    d_r = 16
+    for bits in (4, 8, 16):
+        cfg = dataclasses.replace(get_config("qwen3-8b").reduced(),
+                                  vocab_size=64)
+        cfg = cfg.with_butterfly(layer=1, d_r=d_r, wire_bits=bits)
+        built = M.build(cfg)
+        params, _ = M.init_model(jax.random.key(0), built)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(
+            built, AdamWConfig(lr=constant_schedule(3e-3))))
+        import time as _t
+        t0 = _t.perf_counter()
+        last = None
+        for i, raw in zip(range(60), lm_batches(cfg.vocab_size, 32, 8, seed=5)):
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            params, opt, m = step(params, opt, batch)
+            last = float(m["loss"])
+        us = (_t.perf_counter() - t0) / 60 * 1e6
+        wb = wire_bytes((8, 32, d_r), bits)
+        print(f"wirebits/{bits}bit,{us:.0f},final_loss={last:.3f} "
+              f"wire_bytes_per_batch={wb}")
+
+
+BENCHES = {
+    "fig7": bench_fig7,
+    "wirebits": bench_wirebits,
+    "table4": bench_table4,
+    "table5": bench_table5,
+    "sec3d": bench_sec3d,
+    "wire": bench_wire,
+    "roofline": bench_roofline,
+    "micro": bench_micro,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == '__main__':
+    main()

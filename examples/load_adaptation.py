@@ -1,0 +1,63 @@
+"""Paper Sec. III-C: the partition point adapts to server load at runtime.
+
+The mobile pings the server, gets its load level K_cloud, and re-runs
+Algorithm 1's selection phase over the M hosted partitioned models —
+congestion pushes the split deeper (more work stays on the edge) while still
+offloading less data than the raw input.
+
+This driver sweeps cloud load 0% -> 97.5% for ResNet-50 (the paper's model,
+with its published minimal D_r per split) and for a transformer (qwen3-8b on
+the TPU edge/cloud profile), printing the selected split per (network, load).
+
+Run:  PYTHONPATH=src python examples/load_adaptation.py
+"""
+from repro.configs import get_config
+from repro.configs.resnet50 import PAPER_MIN_DR, resnet50
+from repro.core import costs
+from repro.core.planner import (TrainingPhaseResult, plan_transformer_split,
+                                profiling_phase, selection_phase)
+from repro.core.profiler import GTX_1080TI, JETSON_TX2, TPU_V5E
+from repro.core.wireless import INTER_POD, NETWORKS
+
+LOADS = [0.0, 0.5, 0.9, 0.975]
+
+
+def resnet_sweep():
+    cfg = resnet50()
+    trained = [TrainingPhaseResult(s, PAPER_MIN_DR[s], 0.74)
+               for s in range(1, 17)]
+
+    def split_costs(split, d_r):
+        ef, cf, wire = costs.resnet_split_flops(cfg, split, d_r)
+        return ef, ef / 10, cf, cf / 10, wire
+
+    print("ResNet-50 (paper's model), selected split vs cloud load:")
+    print(f"  {'load':>6s} " + " ".join(f"{n:>6s}" for n in NETWORKS))
+    for load in LOADS:
+        profiles = profiling_phase(trained, split_costs, JETSON_TX2,
+                                   GTX_1080TI, cloud_load=load)
+        row = [selection_phase(profiles, net, "latency").split
+               for net in NETWORKS.values()]
+        print(f"  {load:6.1%} " + " ".join(f"RB{r:<4d}" for r in row))
+    print("  (congestion pushes the split deeper, exactly Sec III-C)\n")
+
+
+def transformer_sweep():
+    cfg = get_config("qwen3-8b")
+    print("qwen3-8b on the pod boundary (edge pod <-> cloud pod, d_r=256):")
+    print(f"  {'load':>6s} {'split':>6s} {'latency':>10s} {'wire':>10s} "
+          f"{'compression':>12s}")
+    for load in LOADS:
+        best, _ = plan_transformer_split(
+            cfg, seq=2048, batch=8, edge=TPU_V5E, cloud=TPU_V5E,
+            interconnect=INTER_POD, d_r=256,
+            candidate_splits=list(range(1, cfg.num_layers)),
+            cloud_load=load)
+        print(f"  {load:6.1%} {best['split']:>6d} "
+              f"{best['latency_s']*1e3:9.2f}ms {best['wire_bytes']/1e6:9.2f}MB "
+              f"{best['compression']:11.1f}x")
+
+
+if __name__ == "__main__":
+    resnet_sweep()
+    transformer_sweep()

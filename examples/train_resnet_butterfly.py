@@ -1,0 +1,103 @@
+"""The paper's experiment at reproducible scale: train ResNet+butterfly
+end-to-end for every (split x D_r) on the synthetic image task, reproduce the
+Fig. 7 accuracy-vs-D_r trend, then run Algorithm 1 (profile + select) across
+3G/4G/Wi-Fi — the miniature of Tables IV/V.
+
+Run:  PYTHONPATH=src python examples/train_resnet_butterfly.py [--steps 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet50 import resnet50
+from repro.core import costs
+from repro.core.planner import (profiling_phase, selection_phase,
+                                TrainingPhaseResult)
+from repro.core.profiler import GTX_1080TI, JETSON_TX2
+from repro.core.wireless import NETWORKS
+from repro.data import ImageTaskConfig, SyntheticImages
+from repro.models.resnet import forward_resnet, init_resnet
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      constant_schedule)
+
+
+def train_and_eval(cfg, steps: int, seed: int = 0) -> float:
+    params = init_resnet(jax.random.key(seed), cfg)
+    task = SyntheticImages(ImageTaskConfig(num_classes=cfg.num_classes,
+                                           image_size=cfg.image_size))
+    rng = np.random.default_rng(seed)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=constant_schedule(1e-3), weight_decay=1e-4)
+
+    def loss_fn(p, x, y):
+        logits = forward_resnet(p, x, cfg, train=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, _ = adamw_update(ocfg, p, g, o)
+        return p, o, l
+
+    for _ in range(steps):
+        x, y = task.batch(32, rng)
+        params, opt, _ = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+    xs, ys = task.batch(256, np.random.default_rng(999))
+    logits = forward_resnet(params, jnp.asarray(xs), cfg, train=False)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ys)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    base = resnet50().reduced()          # 2 residual blocks at 32x32
+    target = train_and_eval(base, args.steps)
+    print(f"baseline (no butterfly) accuracy: {target:.3f}")
+
+    # Fig. 7 trend: accuracy vs D_r for each split
+    print("\naccuracy vs D_r (paper Fig. 7, miniature):")
+    results = {}
+    for split in range(1, base.num_blocks + 1):
+        row = {}
+        for d_r in (1, 2, 4, 8):
+            acc = train_and_eval(base.with_butterfly(split, d_r), args.steps)
+            row[d_r] = acc
+        results[split] = row
+        print(f"  after RB{split}: " +
+              "  ".join(f"D_r={d}: {a:.3f}" for d, a in row.items()))
+
+    # Algorithm 1 training phase result: minimal D_r within 2% of target
+    trained = []
+    for split, row in results.items():
+        ok = [d for d, a in row.items() if a >= target - 0.02]
+        trained.append(TrainingPhaseResult(split, min(ok) if ok else max(row),
+                                           row[min(ok) if ok else max(row)]))
+        print(f"  minimal D_r for RB{split}: {trained[-1].d_r} "
+              f"(acc {trained[-1].accuracy:.3f})")
+
+    # profiling + selection on the FULL ResNet-50 costs (paper's model)
+    full = resnet50()
+    def split_costs(split, d_r):
+        ef, cf, wire = costs.resnet_split_flops(full, split, d_r)
+        return ef, ef / 10, cf, cf / 10, wire
+
+    from repro.configs.resnet50 import PAPER_MIN_DR
+    trained_full = [TrainingPhaseResult(s, PAPER_MIN_DR[s], 0.74)
+                    for s in range(1, 17)]
+    profiles = profiling_phase(trained_full, split_costs, JETSON_TX2, GTX_1080TI)
+    print("\nAlgorithm 1 selection on full ResNet-50 (paper min-D_r):")
+    for net_name, net in NETWORKS.items():
+        for objective in ("latency", "energy"):
+            sel = selection_phase(profiles, net, objective)
+            print(f"  {net_name:5s} {objective:8s}: split after RB{sel.split} "
+                  f"(D_r={sel.d_r})  latency {sel.latency_s*1e3:.2f} ms  "
+                  f"energy {sel.energy_mj:.2f} mJ")
+
+
+if __name__ == "__main__":
+    main()

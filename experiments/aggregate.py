@@ -1,0 +1,102 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+Usage: PYTHONPATH=src python experiments/aggregate.py [--dir experiments/dryrun]
+Prints: the section-Dry-run table, the section-Roofline table (single-pod),
+and the multi-pod compile-proof matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+ARCH_ORDER = ["qwen3-14b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
+              "pixtral-12b", "whisper-base", "gemma-7b", "gemma3-12b",
+              "qwen3-8b", "xlstm-125m", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    recs = {}
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, f)))
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        tag = f.rsplit("_", 1)[-1].replace(".json", "")
+        recs.setdefault(key, []).append((f, r))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB" if b > 1e9 else f"{b/1e6:.1f}MB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    def get(arch, shape, mesh):
+        lst = recs.get((arch, shape, mesh), [])
+        # prefer untagged baseline files
+        for f, r in lst:
+            if f == f"{arch}_{shape}_{mesh.replace('x','-')}.json":
+                return r
+        return lst[0][1] if lst else None
+
+    print("### Dry-run matrix (compile status, peak device memory)\n")
+    print("| arch | shape | 16x16 | 2x16x16 |")
+    print("|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            cells = []
+            for mesh in ("16x16", "2x16x16"):
+                r = get(a, s, mesh)
+                if r is None:
+                    cells.append("(missing)")
+                elif "skipped" in r:
+                    cells.append("skip (documented)")
+                elif "error" in r:
+                    cells.append("ERROR")
+                else:
+                    peak = r.get("memory_analysis", {}).get("peak_memory_in_bytes")
+                    if peak is None:
+                        peak = (r.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+                                + r.get("memory_analysis", {}).get("argument_size_in_bytes", 0))
+                    cells.append(f"OK {fmt_bytes(peak)} ({r['compile_s']:.0f}s)")
+            print(f"| {a} | {s} | {cells[0]} | {cells[1]} |")
+
+    print("\n### Roofline (single-pod 16x16, per-device terms, seconds)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+          "| MODEL_FLOPS/HLO_FLOPS | collectives |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = get(a, s, "16x16")
+            if not r or "compute_s" not in r:
+                continue
+            coll = ", ".join(f"{k.split('-')[-1] if False else k}={fmt_bytes(v)}"
+                             for k, v in sorted(r.get("collectives", {}).items())
+                             if v)
+            print(f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                  f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+                  f"| {r['useful_ratio']:.2f} | {coll or '-'} |")
+
+    missing = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = get(a, s, mesh)
+                if r is None or "error" in r:
+                    missing.append((a, s, mesh))
+    n_ok = sum(1 for lst in recs.values() for f, r in lst if "compute_s" in r)
+    print(f"\nartifacts: {n_ok} compiled records; outstanding: {missing if missing else 'none'}")
+
+
+if __name__ == "__main__":
+    main()

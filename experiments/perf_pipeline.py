@@ -1,0 +1,85 @@
+"""Perf pair 3 (most representative of the paper's technique): the split
+pipeline on the multi-pod mesh, measuring the bytes that actually cross the
+pod boundary (collective-permute payloads in the compiled HLO) for the three
+wire modes:
+
+  raw      prior-art collaborative intelligence (ship the activation)
+  reduced  butterfly reduction only (channel bottleneck, bf16)
+  int8     the paper: reduction + 8-bit wire
+
+Run: python experiments/perf_pipeline.py [--arch xlstm-125m]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.roofline import LINK_BW, collective_bytes
+from repro.models import model as M
+from repro.launch.dryrun import params_abstract, shardings_of
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--microbatch", type=int, default=8)
+    ap.add_argument("--num-microbatches", type=int, default=16)
+    ap.add_argument("--layer", type=int, default=None)
+    ap.add_argument("--d-r", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.serving.pipeline import make_split_pipeline
+    base = get_config(args.arch)
+    layer = args.layer or max(1, base.num_layers // 4)
+    d_r = args.d_r or max(16, base.d_model // 64)
+    cfg = base.with_butterfly(layer, d_r)
+    built = M.build(cfg)
+    mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+
+    p_sds, _ = params_abstract(built)
+    B = args.num_microbatches * args.microbatch
+    tok_sds = jax.ShapeDtypeStruct((B, args.seq), jnp.int32)
+
+    results = {}
+    for mode in ("raw", "reduced", "int8"):
+        pipe = make_split_pipeline(built, mesh, args.num_microbatches,
+                                   args.seq, args.microbatch, wire_mode=mode)
+        t0 = time.time()
+        compiled = jax.jit(pipe).lower(p_sds, tok_sds).compile()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        perm = coll["collective-permute"]
+        results[mode] = {
+            "collective_permute_bytes": perm,
+            "all_collectives": coll,
+            "inter_pod_s": perm / LINK_BW,
+            "compile_s": round(time.time() - t0, 1),
+        }
+        print(f"{mode:8s} collective-permute={perm/1e6:8.2f}MB "
+              f"inter-pod={perm/LINK_BW*1e3:7.3f}ms "
+              f"(compile {results[mode]['compile_s']}s)")
+
+    raw = results["raw"]["collective_permute_bytes"]
+    for mode in ("reduced", "int8"):
+        r = results[mode]["collective_permute_bytes"]
+        print(f"{mode}: {raw / r:.1f}x fewer inter-pod bytes than raw")
+    os.makedirs(args.out, exist_ok=True)
+    fn = os.path.join(args.out, f"pipeline_{args.arch}_wire_modes.json")
+    with open(fn, "w") as f:
+        json.dump({"arch": args.arch, "seq": args.seq, "layer": layer,
+                   "d_r": d_r, "microbatch": args.microbatch,
+                   "num_microbatches": args.num_microbatches,
+                   "results": results}, f, indent=1)
+    print("wrote", fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: the butterfly-unit collaborative-intelligence framework in JAX.
+
+Layers: configs (assigned archs), models (substrate), core (the paper's
+contribution: butterfly + Algorithm 1), kernels (Pallas), data, training,
+serving, launch (mesh/dryrun/roofline/CLIs).
+"""
+__version__ = "0.1.0"

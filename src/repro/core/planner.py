@@ -1,0 +1,173 @@
+"""Algorithm 1 from the paper: the three-phase DNN partitioning algorithm.
+
+  Training phase  — for each candidate split P_j, find (linear search) the
+                    minimal D_r whose end-to-end-trained butterfly model
+                    reaches the accuracy target.
+  Profiling phase — per split: edge latency/power, uplink time F_j/NB,
+                    cloud latency (under load levels K_mobile, K_cloud).
+  Selection phase — argmin end-to-end latency or mobile energy.
+
+The training phase takes a callback (train at small scale, or the paper's
+published Fig. 7 results); profiling uses core/profiler roofline models or
+the paper's published Table IV; selection is exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.profiler import HardwareProfile, SplitProfile, profile_split
+from repro.core.wireless import NETWORKS, WirelessNetwork
+
+# ---------------------------------------------------------------------------
+# training phase
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainingPhaseResult:
+    split: int
+    d_r: int
+    accuracy: float
+
+
+def training_phase(
+    candidate_splits: Sequence[int],
+    channel_sizes: Dict[int, int],
+    train_and_eval: Callable[[int, int], float],
+    accuracy_target: float,
+    max_loss: float = 0.02,
+    dr_schedule: Optional[Sequence[int]] = None,
+) -> List[TrainingPhaseResult]:
+    """Paper Algorithm 1 lines 15-25: linear search of minimal D_r per split.
+
+    ``train_and_eval(split, d_r) -> accuracy``; ``channel_sizes[j]`` is C_{P_j}
+    (the upper bound of the search).  ``dr_schedule`` optionally thins the
+    linear search (the paper sweeps 1..C; we allow 1,2,3,... subsets for
+    small-scale runs)."""
+    results = []
+    floor = accuracy_target - max_loss
+    for j in candidate_splits:
+        found = None
+        grid = dr_schedule if dr_schedule is not None else range(1, channel_sizes[j] + 1)
+        for d_r in grid:
+            if d_r > channel_sizes[j]:
+                break
+            acc = train_and_eval(j, d_r)
+            if acc >= floor:
+                found = TrainingPhaseResult(split=j, d_r=d_r, accuracy=acc)
+                break
+        if found is None:
+            found = TrainingPhaseResult(split=j, d_r=channel_sizes[j],
+                                        accuracy=float("nan"))
+        results.append(found)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# profiling phase
+# ---------------------------------------------------------------------------
+
+
+def profiling_phase(
+    trained: Sequence[TrainingPhaseResult],
+    split_costs: Callable[[int, int], tuple],
+    edge: HardwareProfile,
+    cloud: HardwareProfile,
+    edge_load: float = 0.0,
+    cloud_load: float = 0.0,
+) -> List[SplitProfile]:
+    """``split_costs(split, d_r) -> (edge_flops, edge_bytes, cloud_flops,
+    cloud_bytes, wire_bytes)``."""
+    profiles = []
+    for t in trained:
+        ef, eb, cf, cb, wb = split_costs(t.split, t.d_r)
+        profiles.append(profile_split(
+            t.split, t.d_r, edge_flops=ef, edge_bytes=eb, cloud_flops=cf,
+            cloud_bytes=cb, wire_bytes=wb, edge=edge, cloud=cloud,
+            edge_load=edge_load, cloud_load=cloud_load))
+    return profiles
+
+
+# ---------------------------------------------------------------------------
+# selection phase
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Selection:
+    split: int
+    d_r: int
+    latency_s: float
+    energy_mj: float
+    objective: str
+    network: str
+
+
+def selection_phase(profiles: Sequence[SplitProfile],
+                    network: WirelessNetwork,
+                    objective: str = "latency") -> Selection:
+    assert objective in ("latency", "energy")
+    key = (lambda p: p.latency(network)) if objective == "latency" else \
+        (lambda p: p.mobile_energy_mj(network))
+    best = min(profiles, key=key)
+    return Selection(split=best.split, d_r=best.d_r,
+                     latency_s=best.latency(network),
+                     energy_mj=best.mobile_energy_mj(network),
+                     objective=objective, network=network.name)
+
+
+def select_from_table(table: Dict[int, Dict[str, float]],
+                      objective: str = "latency") -> int:
+    """Selection phase over a published profile table (paper Table IV):
+    {split: {latency_ms, energy_mj}} -> chosen split."""
+    key = "latency_ms" if objective == "latency" else "energy_mj"
+    return min(table, key=lambda j: table[j][key])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end plan for a transformer arch on the pod mesh
+# ---------------------------------------------------------------------------
+
+
+def plan_transformer_split(cfg, seq: int, batch: int, *,
+                           edge: HardwareProfile, cloud: HardwareProfile,
+                           interconnect, d_r: int,
+                           candidate_splits: Optional[Sequence[int]] = None,
+                           objective: str = "latency",
+                           edge_load: float = 0.0, cloud_load: float = 0.0):
+    """Run profiling+selection for a transformer with the butterfly at each
+    candidate layer boundary (training phase assumed done / d_r given).
+
+    Returns (Selection-like dict, per-split profile rows)."""
+    from repro.core import costs
+    from repro.core.butterfly import butterfly_wire_bytes
+
+    n = cfg.num_layers
+    splits = list(candidate_splits) if candidate_splits else list(range(1, n))
+    rows = []
+    act_bytes = 2  # bf16 activations
+    for j in splits:
+        ef = costs.stack_flops(cfg, seq, 0, j) * batch
+        ef += 2 * batch * seq * cfg.d_model * d_r            # reduction unit
+        cf = costs.stack_flops(cfg, seq, j, n) * batch
+        cf += 2 * batch * seq * d_r * cfg.d_model            # restoration
+        cf += costs.embed_flops(cfg, seq) * batch
+        eb = ef / max(cfg.d_model, 1)                        # rough bytes proxy
+        cb = cf / max(cfg.d_model, 1)
+        wire = butterfly_wire_bytes(batch, seq, d_r)
+        t_edge = edge.latency_s(ef, eb) / max(1e-9, 1 - edge_load)
+        t_cloud = cloud.latency_s(cf, cb) / max(1e-9, 1 - cloud_load)
+        t_up = interconnect.uplink_seconds(wire)
+        raw_wire = batch * seq * cfg.d_model * act_bytes
+        rows.append({
+            "split": j, "d_r": d_r, "edge_s": t_edge, "uplink_s": t_up,
+            "cloud_s": t_cloud, "latency_s": t_edge + t_up + t_cloud,
+            "wire_bytes": wire, "raw_bytes": raw_wire,
+            "compression": raw_wire / wire,
+            "energy_mj": t_edge * edge.compute_power_w * 1e3 +
+                         interconnect.uplink_energy_mj(wire),
+        })
+    key = "latency_s" if objective == "latency" else "energy_mj"
+    best = min(rows, key=lambda r: r[key])
+    return best, rows

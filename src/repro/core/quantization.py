@@ -1,0 +1,62 @@
+"""Wire quantization for the butterfly boundary.
+
+The paper quantizes the FP16 reduced feature tensor to 8 bits *only for the
+uplink* (Section III-A); compute stays full precision.  We implement the
+same: symmetric absmax int8 per token row (per (batch, position), over the
+d_r channel axis), an f32 scale vector rides along (its bytes are counted in
+the wire-size accounting — see core/profiler.py).
+
+A straight-through estimator makes the codec differentiable so the butterfly
++ codec train end-to-end, which is the paper's key difference from bolting
+JPEG onto a frozen model.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., d_r) -> (codes int8/int16, scales f32 (..., 1))."""
+    assert bits in (4, 8, 16), bits
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    return codes.astype(dtype), scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient."""
+    codes, scale = quantize(x, bits)
+    return dequantize(codes, scale, x.dtype)
+
+
+def _fq_fwd(x, bits):
+    return fake_quant(x, bits), None
+
+
+def _fq_bwd(bits, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def wire_bytes(shape: tuple, bits: int) -> int:
+    """Bytes on the wire for codes + per-row f32 scales."""
+    import math
+    n = math.prod(shape)
+    rows = n // shape[-1]
+    return n * bits // 8 + rows * 4

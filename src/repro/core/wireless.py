@@ -1,0 +1,56 @@
+"""Wireless network + power models from the paper (Tables III), used by the
+faithful reproduction benchmarks, plus the TPU interconnect profile used by
+the deployment planner.
+
+Paper's uplink power model (Huang et al., MobiSys'12): P_u = alpha_u * t_u + beta
+with t_u the uplink throughput in Mbps and P in mW.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WirelessNetwork:
+    name: str
+    uplink_mbps: float
+    alpha_mw_per_mbps: float
+    beta_mw: float
+
+    def uplink_seconds(self, nbytes: float) -> float:
+        return nbytes * 8.0 / (self.uplink_mbps * 1e6)
+
+    def uplink_power_mw(self) -> float:
+        return self.alpha_mw_per_mbps * self.uplink_mbps + self.beta_mw
+
+    def uplink_energy_mj(self, nbytes: float) -> float:
+        return self.uplink_seconds(nbytes) * 1e3 * self.uplink_power_mw() * 1e-3
+
+
+# Table III (average US 3G/4G/Wi-Fi, opensignal/speedtest 2017)
+NETWORKS = {
+    "3g": WirelessNetwork("3g", 1.1, 868.98, 817.88),
+    "4g": WirelessNetwork("4g", 5.85, 438.39, 1288.04),
+    "wifi": WirelessNetwork("wifi", 18.88, 283.17, 132.86),
+}
+
+
+@dataclass(frozen=True)
+class Interconnect:
+    """TPU-deployment analogue of the wireless link: the slow boundary the
+    butterfly compresses.  bytes/s and an energy proxy (pJ/byte)."""
+    name: str
+    bytes_per_s: float
+    pj_per_byte: float = 10.0
+
+    def uplink_seconds(self, nbytes: float) -> float:
+        return nbytes / self.bytes_per_s
+
+    def uplink_energy_mj(self, nbytes: float) -> float:
+        return nbytes * self.pj_per_byte * 1e-9
+
+
+# inter-pod boundary: ~1 ICI link worth of bandwidth per device pair crossing
+# pods (DCN-class in real deployments; we use the assignment's 50 GB/s/link).
+INTER_POD = Interconnect("inter_pod", 50e9)
+INTRA_POD = Interconnect("intra_pod_ici", 50e9 * 4)   # 4 links per chip

@@ -1,0 +1,14 @@
+from repro.data.pipeline import (
+    ImageTaskConfig,
+    LMStreamConfig,
+    MarkovLMStream,
+    SyntheticImages,
+    image_batches,
+    lm_batches,
+    shard_batch,
+)
+
+__all__ = [
+    "ImageTaskConfig", "LMStreamConfig", "MarkovLMStream", "SyntheticImages",
+    "image_batches", "lm_batches", "shard_batch",
+]

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots this system optimizes:
+#   butterfly_kernel  fused reduction-projection + int8 wire quantization
+#                     (the paper's edge-side hot path) and its mirror
+#   flash_attention   blockwise-softmax GQA attention (causal/sliding window)
+#   rmsnorm           fused row-tiled RMSNorm
+# ops.py = jit'd wrappers (interpret mode on CPU); ref.py = jnp oracles.

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the butterfly hot path: fused reduction projection +
+int8 wire quantization (and the mirror dequant + restoration).
+
+Why fuse: on the edge stage the reduced tensor (T, d_r) would otherwise make
+an HBM round trip between the matmul and the quantizer; fusing keeps it in
+VMEM, and the only HBM writes are the int8 codes + f32 scales — exactly the
+bytes that cross the pod boundary.  Token-tiled: each grid step loads a
+(TM, d) x-tile and the full (d, d_r) weight (d_r << d, so the weight tile is
+small), runs the MXU matmul at f32 accumulation, then the absmax/scale/round
+epilogue in-register.
+
+TM defaults to 256 rows; d and d_r are padded to the 128-lane boundary by
+the ops.py wrapper so MXU dims stay hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_quant_kernel(x_ref, w_ref, codes_ref, scales_ref, *, qmax: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    r = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (TM, d_r) f32, MXU
+    absmax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(r / scale), -qmax - 1, qmax)
+    codes_ref[...] = codes.astype(jnp.int8)
+    scales_ref[...] = scale
+
+
+def butterfly_reduce_quant_kernel(x, w_reduce, *, bits: int = 8,
+                                  block_t: int = 256,
+                                  interpret: bool = False):
+    """x: (T, d), w_reduce: (d, d_r); T % block_t == 0, dims 128-aligned."""
+    T, d = x.shape
+    d_r = w_reduce.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    qmax = 2 ** (bits - 1) - 1
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        functools.partial(_reduce_quant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_r), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d_r), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, d_r), jnp.int8),
+            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w_reduce)
+
+
+def _dequant_restore_kernel(codes_ref, scales_ref, w_ref, out_ref):
+    r = codes_ref[...].astype(jnp.float32) * scales_ref[...]
+    w = w_ref[...]
+    out = jax.lax.dot_general(
+        r, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def butterfly_dequant_restore_kernel(codes, scales, w_restore, *,
+                                     out_dtype=jnp.float32,
+                                     block_t: int = 256,
+                                     interpret: bool = False):
+    """codes: (T, d_r) int8, scales: (T, 1), w_restore: (d_r, d) -> (T, d)."""
+    T, d_r = codes.shape
+    d = w_restore.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        _dequant_restore_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_r), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d_r, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), out_dtype),
+        interpret=interpret,
+    )(codes, scales, w_restore)

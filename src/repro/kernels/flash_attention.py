@@ -1,0 +1,123 @@
+"""Blockwise (flash) attention Pallas TPU kernel with GQA, causal and
+sliding-window masking.
+
+Grid: (B*N heads, num_q_blocks, num_k_blocks) with the k axis innermost
+("arbitrary" semantics): running max/denominator/accumulator live in VMEM
+scratch across k-block steps, initialized at k==0 and written back at the
+final k block — the standard online-softmax structure, with block sizes
+chosen so (block_q x d) + 2*(block_k x d) tiles fit VMEM and the matmul dims
+are 128-multiples for the MXU.
+
+GQA is handled in the BlockSpec index maps: query head h reads kv head
+h // (N // K) — no repeat/materialization of K/V.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, seq_q: int,
+                 seq_k: int, causal: bool, window: Optional[int]):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # absolute positions; queries are aligned to the end of the kv sequence
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (seq_k - seq_q)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, S, N, hd); k/v: (B, T, K, hd); returns (B, S, N, hd)."""
+    B, S, N, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = N // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+
+    # flatten (batch, head): row i -> batch i//N, q-head i%N, kv-head (i%N)//G
+    qf = q.transpose(0, 2, 1, 3).reshape(B * N, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+
+    def q_index(i, qi, ki):
+        return (i, qi, 0)
+
+    def kv_index(i, qi, ki):
+        return ((i // N) * K + (i % N) // G, ki, 0)
+
+    grid = (B * N, S // block_q, T // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=1.0 / math.sqrt(hd), block_q=block_q,
+            block_k=block_k, seq_q=S, seq_k=T, causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * N, S, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),      # running max
+            _vmem((block_q, 1), jnp.float32),      # running denominator
+            _vmem((block_q, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, N, S, hd).transpose(0, 2, 1, 3)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

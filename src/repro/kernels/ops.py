@@ -1,0 +1,109 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes with jnp semantics, which is how correctness is validated.  On a
+real TPU backend the same calls compile through Mosaic.  ``use_pallas()``
+picks the implementation; callers can force the reference path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.butterfly_kernel import (
+    butterfly_dequant_restore_kernel,
+    butterfly_reduce_quant_kernel,
+)
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.rmsnorm import rmsnorm_kernel
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple: int, axis: int):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t"))
+def butterfly_reduce_quant(x, w_reduce, *, bits: int = 8,
+                           block_t: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., d) -> (codes (..., d_r) int8, scales (..., 1) f32)."""
+    shape = x.shape
+    d = shape[-1]
+    d_r = w_reduce.shape[1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    block = min(block_t, max(8, T))
+    xf, pad_t = _pad_to(xf, block, 0)
+    codes, scales = butterfly_reduce_quant_kernel(
+        xf, w_reduce, bits=bits, block_t=block, interpret=interpret_mode())
+    if pad_t:
+        codes, scales = codes[:T], scales[:T]
+    return codes.reshape(*shape[:-1], d_r), scales.reshape(*shape[:-1], 1)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block_t"))
+def butterfly_dequant_restore(codes, scales, w_restore, *,
+                              out_dtype=jnp.float32, block_t: int = 256):
+    shape = codes.shape
+    d_r = shape[-1]
+    d = w_restore.shape[1]
+    cf = codes.reshape(-1, d_r)
+    sf = scales.reshape(-1, 1)
+    T = cf.shape[0]
+    block = min(block_t, max(8, T))
+    cf, pad_t = _pad_to(cf, block, 0)
+    sf, _ = _pad_to(sf, block, 0)
+    out = butterfly_dequant_restore_kernel(
+        cf, sf, w_restore, out_dtype=out_dtype, block_t=block,
+        interpret=interpret_mode())
+    if pad_t:
+        out = out[:T]
+    return out.reshape(*shape[:-1], d)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128):
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret_mode())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_t"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_t: int = 256):
+    """x: (..., d) -> fused RMSNorm (gemma-style 1+w weight)."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    T = xf.shape[0]
+    block = min(block_t, max(8, T))
+    xf, pad_t = _pad_to(xf, block, 0)
+    out = rmsnorm_kernel(xf, w, eps=eps, block_t=block,
+                         interpret=interpret_mode())
+    if pad_t:
+        out = out[:T]
+    return out.reshape(shape)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    from repro.models.common import rms_norm
+    return rms_norm(x, w, eps)
+
+
+# reference aliases (oracles)
+butterfly_reduce_quant_ref = ref.butterfly_reduce_quant_ref
+butterfly_dequant_restore_ref = ref.butterfly_dequant_restore_ref
+flash_attention_ref = ref.flash_attention_ref

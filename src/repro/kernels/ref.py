@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def butterfly_reduce_quant_ref(x, w_reduce, bits: int = 8):
+    """x: (T, d), w_reduce: (d, d_r) -> (codes int8 (T, d_r), scales f32 (T, 1))."""
+    qmax = 2 ** (bits - 1) - 1
+    r = (x.astype(jnp.float32) @ w_reduce.astype(jnp.float32))
+    absmax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(r / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def butterfly_dequant_restore_ref(codes, scales, w_restore, out_dtype=jnp.float32):
+    """codes: (T, d_r) int8, scales (T, 1) -> (T, d)."""
+    r = codes.astype(jnp.float32) * scales
+    return (r @ w_restore.astype(jnp.float32)).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B,S,N,hd), k/v: (B,T,K,hd) with N % K == 0 -> (B,S,N,hd) f32 math."""
+    B, S, N, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = N // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None] + (T - S)     # align ends (prefill continuation)
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, N, hd).astype(q.dtype)

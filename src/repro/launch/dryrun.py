@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is the multi-pod dry-run driver:
+# for every (architecture x input shape x mesh) it AOT-lowers the real
+# train/prefill/serve step with production shardings, compiles, and records
+# memory/cost/roofline analysis.  No arrays are ever allocated at full scale
+# (ShapeDtypeStruct in, compiled artifact out).
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.models.transformer as _tfm
+
+from repro.configs import INPUT_SHAPES, get_config, supports_shape
+from repro.configs.all import ASSIGNED
+from repro.core import costs
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models import model as M
+from repro.models.parallel import make_context
+from repro.training.optimizer import AdamWConfig, adamw_init, cosine_schedule
+from repro.training.train_loop import make_train_step
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def shardings_of(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_is_p)
+
+
+def params_abstract(built):
+    """(param ShapeDtypeStructs, PartitionSpec tree) without allocation."""
+    captured = {}
+
+    def initf(key):
+        p, s = M.init_model(key, built)
+        captured["s"] = s
+        return p
+
+    sds = jax.eval_shape(initf, jax.random.key(0))
+    return sds, captured["s"]
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               butterfly_layer: Optional[int] = None, d_r: int = 0,
+               donate: bool = True, extra_note: str = "",
+               unroll: Optional[bool] = None):
+    """Lower+compile one (arch x shape x mesh). Returns (compiled, meta).
+
+    ``unroll`` — fully unroll segment scans so cost_analysis is exact (XLA
+    counts while bodies once).  Default: unroll on the single-pod mesh (the
+    roofline table is single-pod), rolled on multi-pod (compile-proof only).
+    """
+    _tfm.SCAN_UNROLL = (not multi_pod) if unroll is None else unroll
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if butterfly_layer is not None:
+        cfg = cfg.with_butterfly(butterfly_layer, d_r or max(64, cfg.d_model // 16))
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    long_mode = shape_name == "long_500k"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pctx = make_context(mesh)
+    built = M.build(cfg, long_mode=long_mode)
+
+    p_sds, p_specs = params_abstract(built)
+    p_sh = shardings_of(mesh, p_specs)
+    batch_sds, batch_specs = M.input_specs(built, shape, pctx)
+    batch_sh = shardings_of(mesh, batch_specs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, p_sds)
+        opt_specs = {"mu": p_specs, "nu": p_specs, "step": P()}
+        opt_sh = shardings_of(mesh, opt_specs)
+        step_fn = make_train_step(
+            built, AdamWConfig(lr=cosine_schedule(3e-4, 100, 10000)), pctx)
+        jfn = jax.jit(step_fn,
+                      in_shardings=(p_sh, opt_sh, batch_sh),
+                      out_shardings=(p_sh, opt_sh, None),
+                      donate_argnums=(0, 1) if donate else ())
+        lowered = jfn.lower(p_sds, opt_sds, batch_sds)
+        model_flops = costs.model_flops_train(cfg, shape.global_batch * shape.seq_len)
+    elif shape.kind == "prefill":
+
+        def prefill_fn(params, batch):
+            return M.forward_prefill(params, built, batch, pctx)
+
+        out_sh = None
+        if os.environ.get("REPRO_PREFILL_CACHE_SHARDED", "0") == "1":
+            # perf iteration (EXPERIMENTS.md section Perf): without explicit
+            # out_shardings XLA replicates the produced KV caches across the
+            # mesh (TB-scale all-gathers); pin them batch->data, seq->model
+            cache_specs = [_tfm.stage_cache_spec(
+                list(segs), pctx.batch_spec_axes(), "model")
+                for segs in built.stages]
+            out_sh = (None, shardings_of(mesh, cache_specs))
+        jfn = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh),
+                      out_shardings=out_sh)
+        lowered = jfn.lower(p_sds, batch_sds)
+        model_flops = 2.0 * costs.param_count(cfg, active_only=True) * \
+            shape.global_batch * shape.seq_len
+    else:  # decode
+        seq_axis = ("data", "model") if shape.global_batch == 1 else "model"
+        cache_sds, cache_specs = M.decode_state_specs(built, shape, pctx,
+                                                      seq_axis=seq_axis)
+        cache_sh = shardings_of(mesh, cache_specs)
+
+        def decode_fn(params, tokens, caches, pos):
+            return M.forward_decode(params, built, tokens, caches, pos, pctx)
+
+        tok_sh = shardings_of(mesh, batch_specs)["tokens"]
+        jfn = jax.jit(decode_fn,
+                      in_shardings=(p_sh, tok_sh, cache_sh, None),
+                      out_shardings=(None, cache_sh),
+                      donate_argnums=(2,) if donate else ())
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jfn.lower(p_sds, batch_sds["tokens"], cache_sds, pos_sds)
+        model_flops = costs.model_flops_decode(cfg, shape.global_batch)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh_chips(mesh),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops": model_flops,
+        "butterfly": None if cfg.butterfly is None else
+            {"layer": cfg.butterfly.layer, "d_r": cfg.butterfly.d_r},
+        "unrolled": _tfm.SCAN_UNROLL,
+        "note": extra_note,
+    }
+    return compiled, meta
+
+
+def _corrected_costs(arch, shape_name, multi_pod, butterfly_layer, d_r):
+    """Two-point scan correction for stacks too deep to unroll within the
+    compile budget: lower with unroll=1 and unroll=2; the delta isolates one
+    extra per-iteration body per segment (+ odd-length remainders), from
+    which exact totals follow under a per-layer-uniform cost assumption
+    within each segment (exact for single-segment stacks; DESIGN.md 9.5).
+
+    m1 = out + sum_s L_s*u ;  m2 = out + sum_s (2 + r_s%2)*L_s*u
+    => u = (m2-m1) / sum_s (1 + r_s%2)*L_s
+    total = m1 + sum_s (r_s-1)*L_s*u
+    """
+    from repro.configs import get_config as _gc
+    cfg = _gc(arch)
+    if butterfly_layer is not None:
+        cfg = cfg.with_butterfly(butterfly_layer, d_r or 64)
+    built = M.build(cfg, long_mode=shape_name == "long_500k")
+    segs = [s for stage in built.stages for s in stage]
+    denom = sum((1 + s.repeats % 2) * len(s.unit) for s in segs if s.repeats > 1)
+    numer = sum((s.repeats - 1) * len(s.unit) for s in segs)
+    c1, meta1 = lower_pair(arch, shape_name, multi_pod, butterfly_layer, d_r,
+                           unroll=1)
+    c2, _ = lower_pair(arch, shape_name, multi_pod, butterfly_layer, d_r,
+                       unroll=2)
+    rep1 = roofline.analyze(arch, shape_name, meta1["mesh"], meta1["chips"],
+                            c1, meta1["model_flops"])
+    rep2 = roofline.analyze(arch, shape_name, meta1["mesh"], meta1["chips"],
+                            c2, meta1["model_flops"])
+
+    def corr(a, b):
+        return a + (b - a) / max(denom, 1) * numer
+
+    rep1.flops_per_device = corr(rep1.flops_per_device, rep2.flops_per_device)
+    rep1.bytes_per_device = corr(rep1.bytes_per_device, rep2.bytes_per_device)
+    rep1.collectives = {k: int(corr(rep1.collectives[k], rep2.collectives[k]))
+                        for k in rep1.collectives}
+    rep1.collective_bytes_per_device = sum(rep1.collectives.values())
+    rep1.compute_s = rep1.flops_per_device / roofline.PEAK_FLOPS
+    rep1.memory_s = rep1.bytes_per_device / roofline.HBM_BW
+    rep1.collective_s = rep1.collective_bytes_per_device / roofline.LINK_BW
+    terms = {"compute": rep1.compute_s, "memory": rep1.memory_s,
+             "collective": rep1.collective_s}
+    rep1.bottleneck = max(terms, key=terms.get)
+    total = rep1.flops_per_device * meta1["chips"]
+    rep1.useful_ratio = meta1["model_flops"] / total if total else 0.0
+    rep1.note = "two-point scan correction (unroll 1 vs 2)"
+    meta1["unrolled"] = "corrected"
+    return rep1, meta1
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             butterfly_layer: Optional[int] = None, d_r: int = 0,
+             tag: str = "", unroll: Optional[bool] = None,
+             correct: bool = False) -> dict:
+    if correct:
+        ok, why = supports_shape(get_config(arch), INPUT_SHAPES[shape_name])
+        if not ok:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "skipped": why}
+            print(f"SKIP  {arch:28s} {shape_name:12s} {mesh_name:8s} {why}")
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}_{shape_name}_{mesh_name.replace('x','-')}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+            return rec
+        rep, meta = _corrected_costs(arch, shape_name, multi_pod,
+                                     butterfly_layer, d_r)
+        mesh_name = meta["mesh"]
+        rec = {**meta, **roofline.to_dict(rep)}
+        print(f"OK*   {arch:28s} {shape_name:12s} {mesh_name:8s} "
+              f"compute={rep.compute_s*1e3:8.2f}ms memory={rep.memory_s*1e3:8.2f}ms "
+              f"coll={rep.collective_s*1e3:8.2f}ms bottleneck={rep.bottleneck:10s} "
+              f"useful={rep.useful_ratio:5.2f} (scan-corrected)")
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"{arch}_{shape_name}_{mesh_name.replace('x','-')}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        return rec
+    compiled, meta = lower_pair(arch, shape_name, multi_pod,
+                                butterfly_layer, d_r, unroll=unroll)
+    mesh_name = meta.get("mesh", "2x16x16" if multi_pod else "16x16")
+    if compiled is None:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, **meta}
+        print(f"SKIP  {arch:28s} {shape_name:12s} {mesh_name:8s} {meta['skipped']}")
+    else:
+        rep = roofline.analyze(arch, shape_name, mesh_name, meta["chips"],
+                               compiled, meta["model_flops"])
+        rec = {**meta, **roofline.to_dict(rep)}
+        mem = rec.get("memory_analysis", {})
+        peak = mem.get("peak_memory_in_bytes") or (
+            mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0))
+        print(f"OK    {arch:28s} {shape_name:12s} {mesh_name:8s} "
+              f"compute={rep.compute_s*1e3:8.2f}ms memory={rep.memory_s*1e3:8.2f}ms "
+              f"coll={rep.collective_s*1e3:8.2f}ms bottleneck={rep.bottleneck:10s} "
+              f"useful={rep.useful_ratio:5.2f} peakmem={peak/1e9:6.2f}GB "
+              f"compile={meta['compile_s']}s")
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fname = f"{arch}_{shape_name}_{mesh_name.replace('x','-')}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod AOT dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*INPUT_SHAPES, None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all arch x shape")
+    ap.add_argument("--butterfly-layer", type=int, default=None)
+    ap.add_argument("--d-r", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--correct-scan", action="store_true",
+                    help="two-point scan correction instead of full unroll")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_pair(arch, shape, mp, args.out,
+                                            args.butterfly_layer, args.d_r,
+                                            tag=args.tag,
+                                            correct=args.correct_scan))
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    print(f"FAIL  {arch:28s} {shape:12s} "
+                          f"{'2x16x16' if mp else '16x16':8s} "
+                          f"{type(e).__name__}: {e}")
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "error": f"{type(e).__name__}: {e}"})
+    n_ok = sum(1 for r in results if "compute_s" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count=512`` before first jax init and then
+calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,18 @@
+from repro.models.model import (
+    BuiltModel,
+    build,
+    decode_state_specs,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_model,
+    input_specs,
+    lm_loss,
+)
+from repro.models.parallel import LOCAL, ParallelContext, make_context
+
+__all__ = [
+    "BuiltModel", "build", "decode_state_specs", "forward_decode",
+    "forward_prefill", "forward_train", "init_model", "input_specs",
+    "lm_loss", "LOCAL", "ParallelContext", "make_context",
+]

@@ -1,0 +1,54 @@
+"""ParallelContext: how model code sees the mesh.
+
+Model code never imports the launcher; it receives a ParallelContext that is
+either ``LOCAL`` (single device, tests/benches) or built from the production
+mesh (dry-run / train / serve).  MoE uses it for explicit shard_map expert
+parallelism; everything else uses GSPMD propagation from the param specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[jax.sharding.Mesh]
+    data_axes: Tuple[str, ...] = ("data",)     # ("pod", "data") when multi-pod
+    model_axis: str = "model"
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def mp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    def batch_spec_axes(self):
+        """Axes tuple for sharding a batch dim (None when local)."""
+        if self.mesh is None:
+            return None
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+LOCAL = ParallelContext(mesh=None)
+
+
+def make_context(mesh: Optional[jax.sharding.Mesh]) -> ParallelContext:
+    if mesh is None:
+        return LOCAL
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    return ParallelContext(mesh=mesh, data_axes=data_axes, model_axis="model")

@@ -1,0 +1,176 @@
+"""Paper-faithful ResNet-50 (He et al. 2015) in pure JAX, with the butterfly
+unit insertable after any of the 16 residual blocks — exactly the paper's
+Fig. 4/6 setup.
+
+Deviation noted in DESIGN.md: BatchNorm is replaced by GroupNorm(32) so the
+model is stateless (no running stats to thread through pjit); this does not
+change the butterfly mechanics the paper studies.  The butterfly unit is the
+paper's literal form: 1x1 conv C -> D_r (reduction, edge side), int8 wire
+quantization, 1x1 conv D_r -> C (restoration, cloud side), trained
+end-to-end via the straight-through fake-quant.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet50 import ResNetConfig
+from repro.core.quantization import fake_quant
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout)) * \
+        math.sqrt(2.0 / fan_in)
+
+
+def conv(x, w, stride: int = 1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, scale, bias, groups: int = 32, eps: float = 1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, H, W, C) * scale + bias).astype(x.dtype)
+
+
+def _norm_params(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def max_pool(x, window=3, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "SAME")
+
+
+# ---------------------------------------------------------------------------
+# bottleneck residual block
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cin, cout, stride):
+    mid = cout // 4
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": _conv_init(ks[0], 1, 1, cin, mid), "n1": _norm_params(mid),
+        "conv2": _conv_init(ks[1], 3, 3, mid, mid), "n2": _norm_params(mid),
+        "conv3": _conv_init(ks[2], 1, 1, mid, cout), "n3": _norm_params(cout),
+    }
+    if cin != cout or stride != 1:
+        p["proj"] = _conv_init(ks[3], 1, 1, cin, cout)
+        p["np"] = _norm_params(cout)
+    return p
+
+
+def apply_block(p, x, stride):
+    h = jax.nn.relu(group_norm(conv(x, p["conv1"]), **p["n1"]))
+    h = jax.nn.relu(group_norm(conv(h, p["conv2"], stride), **p["n2"]))
+    h = group_norm(conv(h, p["conv3"]), **p["n3"])
+    if "proj" in p:
+        x = group_norm(conv(x, p["proj"], stride), **p["np"])
+    return jax.nn.relu(x + h)
+
+
+# ---------------------------------------------------------------------------
+# butterfly unit (paper Fig. 1/2: 1x1 conv down, wire, 1x1 conv up)
+# ---------------------------------------------------------------------------
+
+
+def init_butterfly_conv(key, c, d_r):
+    k1, k2 = jax.random.split(key)
+    return {"reduce": _conv_init(k1, 1, 1, c, d_r),
+            "restore": _conv_init(k2, 1, 1, d_r, c)}
+
+
+def apply_butterfly_conv(p, x, wire_bits=8, train=True):
+    r = conv(x, p["reduce"])
+    r = fake_quant(r, wire_bits)          # straight-through int8 wire
+    return conv(r, p["restore"])
+
+
+# ---------------------------------------------------------------------------
+# full network
+# ---------------------------------------------------------------------------
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    ks = iter(jax.random.split(key, 64))
+    params = {
+        "stem": _conv_init(next(ks), 7, 7, 3, cfg.stem_channels),
+        "stem_n": _norm_params(cfg.stem_channels),
+        "blocks": [],
+        "head": jax.random.truncated_normal(
+            next(ks), -2, 2, (cfg.stages[-1][1], cfg.num_classes)) *
+            math.sqrt(1.0 / cfg.stages[-1][1]),
+    }
+    cin = cfg.stem_channels
+    for si, (blocks, cout) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            params["blocks"].append(init_block(next(ks), cin, cout, stride))
+            cin = cout
+    if cfg.butterfly is not None:
+        c = cfg.block_channels()[cfg.butterfly.layer - 1]
+        params["butterfly"] = init_butterfly_conv(next(ks), c, cfg.butterfly.d_r)
+    return params
+
+
+def forward_resnet(params, images, cfg: ResNetConfig, train: bool = True):
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = max_pool(jax.nn.relu(group_norm(conv(images, params["stem"], 2),
+                                        **params["stem_n"])))
+    bidx = 0
+    for si, (blocks, cout) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = apply_block(params["blocks"][bidx], x, stride)
+            bidx += 1
+            if cfg.butterfly is not None and bidx == cfg.butterfly.layer:
+                x = apply_butterfly_conv(params["butterfly"], x,
+                                         cfg.butterfly.wire_bits, train)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"]
+
+
+def edge_cloud_split(params, images, cfg: ResNetConfig):
+    """Run the split explicitly: edge half returns the quantized wire tensor,
+    cloud half consumes it — used by the split-serving example and tests."""
+    from repro.core.quantization import dequantize, quantize
+    assert cfg.butterfly is not None
+    x = max_pool(jax.nn.relu(group_norm(conv(images, params["stem"], 2),
+                                        **params["stem_n"])))
+    bidx = 0
+    blocks_meta = []
+    for si, (blocks, cout) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            blocks_meta.append(2 if (bi == 0 and si > 0) else 1)
+    # edge
+    for b in range(cfg.butterfly.layer):
+        x = apply_block(params["blocks"][b], x, blocks_meta[b])
+    r = conv(x, params["butterfly"]["reduce"])
+    codes, scales = quantize(r, cfg.butterfly.wire_bits)
+    wire = {"codes": codes, "scales": scales}       # <- the only offloaded data
+    # cloud
+    r = dequantize(wire["codes"], wire["scales"], x.dtype)
+    x = conv(r, params["butterfly"]["restore"])
+    for b in range(cfg.butterfly.layer, cfg.num_blocks):
+        x = apply_block(params["blocks"][b], x, blocks_meta[b])
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"], wire

@@ -1,0 +1,223 @@
+"""Mamba2 (SSD) block: chunked state-space dual form for train/prefill and a
+recurrent step for decode.
+
+The chunked algorithm follows Dao & Gu 2024 (SSD): within a chunk the output
+is a masked-decay attention-like matmul (MXU-friendly); across chunks a
+single lax.scan carries the (B, H, P, N) state.  All decay exponents are
+differences of a *decreasing* cumulative sum (A<0, dt>0) so every exp() is
+<= 1 and bf16-safe.
+
+State for decode: {"ssm": (B, H, P, N), "conv": (B, W-1, d_conv_channels)}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import dense_init, dense_spec, rms_norm
+from repro.models.parallel import ParallelContext
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.num_heads * s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return s, d_inner, conv_ch
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s, d_inner, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * s.state_dim + s.num_heads   # z, x, B, C, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "in_proj": dense_init(k1, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch), jnp.float32)
+                   * (1.0 / math.sqrt(s.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((s.num_heads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, s.num_heads, dtype=jnp.float32)),
+        "D": jnp.ones((s.num_heads,), jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(k3, d_inner, d, dtype, scale=1.0 / d_inner),
+    }
+    specs = {
+        "in_proj": dense_spec((d, proj_out), 1),
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "dt_bias": P(None),
+        "A_log": P(None),
+        "D": P(None),
+        "norm_w": P(None),
+        "out_proj": dense_spec((d_inner, d), 0),
+    }
+    return params, specs
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, d_inner, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, s.num_heads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_state_spec(batch_axis) -> dict:
+    return {"ssm": P(batch_axis, None, None, None),
+            "conv": P(batch_axis, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    s, d_inner, conv_ch = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:].astype(jnp.float32)     # (..., H)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, width: int):
+    """Depthwise causal conv over (B, S, C) via width-shifted adds."""
+    out = xbc * conv_w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :xbc.shape[1]]
+        out = out + shifted * conv_w[-1 - i]
+    return jax.nn.silu(out + conv_b)
+
+
+def _gated_out(params, y, z, cfg: ModelConfig):
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    return y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def mamba_fullseq(params, x, *, cfg: ModelConfig, return_state: bool = False):
+    s, d_inner, conv_ch = _dims(cfg)
+    Bsz, S, _ = x.shape
+    H, Pd, N, L = s.num_heads, s.head_dim, s.state_dim, s.chunk_size
+    L = min(L, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    C = S // L
+
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], s.conv_width)
+    xs = xbc[..., :d_inner].reshape(Bsz, S, H, Pd)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])                  # (B,S,H) f32
+    A = -jnp.exp(params["A_log"])                                 # (H,) < 0
+    a = dt * A                                                    # (B,S,H) < 0
+
+    # chunked views
+    xc = xs.reshape(Bsz, C, L, H, Pd)
+    dtc = dt.reshape(Bsz, C, L, H)
+    Bc = Bm.reshape(Bsz, C, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, C, L, N).astype(jnp.float32)
+    ac = a.reshape(Bsz, C, L, H)
+    cum = jnp.cumsum(ac, axis=2)                                  # (B,C,L,H)
+
+    # ---- intra-chunk (decay-masked attention) -----------------------------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (B,C,L,L,H) i-j
+    mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: masked (i<j) entries are positive and can overflow;
+    # where(mask, exp(seg), 0) would make the backward 0 * inf = NaN
+    decay = jnp.exp(jnp.where(mask, seg, -1e9))                   # <= 1
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    G = (scores[..., None] * decay).astype(x.dtype)               # (B,C,L,L,H)
+    xdt = (xc * dtc[..., None].astype(x.dtype))
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", G, xdt)
+
+    # ---- chunk summary states ---------------------------------------------
+    last = cum[:, :, -1:, :]                                      # (B,C,1,H)
+    w = jnp.exp(last - cum) * dtc                                 # (B,C,L,H)
+    S_chunk = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                         Bc, w, xc.astype(jnp.float32))           # (B,C,H,P,N)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :])                       # (B,C,H)
+
+    def step(state, inputs):
+        s_c, dec_c, C_c, cum_c = inputs
+        # y from previous state, decayed to each position in the chunk
+        y = jnp.einsum("bln,bhpn->blhp", C_c, state) * \
+            jnp.exp(cum_c)[..., None].transpose(0, 1, 2, 3)
+        new = state * dec_c[:, :, None, None] + s_c
+        return new, y
+
+    init = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    # scan over chunk axis: move C to leading
+    xs_scan = (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2),
+               Cc.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3))
+    final_state, y_inter = jax.lax.scan(step, init, xs_scan)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                    # (B,C,L,H,P)
+
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, Pd)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    out = _gated_out(params, y, z, cfg)
+    if return_state:
+        # conv state must come from the *pre-activation* conv input stream
+        return out, {"ssm": final_state, "conv": _conv_tail(params, x, cfg)}
+    return out, None
+
+
+def _conv_tail(params, x, cfg: ModelConfig):
+    """Last (W-1) pre-conv channel rows, for seeding decode."""
+    s, d_inner, conv_ch = _dims(cfg)
+    _, xbc, _ = _split_proj(params, x, cfg)
+    return xbc[:, -(s.conv_width - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+
+def mamba_decode(params, x, state, *, cfg: ModelConfig):
+    """x: (B, 1, d); state: {"ssm": (B,H,P,N) f32, "conv": (B,W-1,Cc)}."""
+    s, d_inner, conv_ch = _dims(cfg)
+    Bsz = x.shape[0]
+    H, Pd, N = s.num_heads, s.head_dim, s.state_dim
+
+    z, xbc_new, dt = _split_proj(params, x, cfg)                  # (B,1,*)
+    window = jnp.concatenate([state["conv"], xbc_new], axis=1)    # (B,W,Cc)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32))[:, None, :]
+    new_conv_state = window[:, 1:, :]
+
+    xs = xbc[..., :d_inner].reshape(Bsz, H, Pd)
+    Bm = xbc[..., d_inner:d_inner + N].reshape(Bsz, N)
+    Cm = xbc[..., d_inner + N:].reshape(Bsz, N)
+
+    dt = jax.nn.softplus(dt[:, 0] + params["dt_bias"])            # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                       # (B,H)
+
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32), Bm)
+    ssm = state["ssm"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    out = _gated_out(params, y, z, cfg)
+    return out, {"ssm": ssm, "conv": new_conv_state.astype(state["conv"].dtype)}

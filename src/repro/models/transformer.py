@@ -1,0 +1,403 @@
+"""Segment/scan-based layer stack shared by all assigned architectures.
+
+A model is a flat list of ``LayerDef``s compressed into ``Segment``s (a
+repeating unit scanned with stacked params) so the lowered HLO is O(#segment
+kinds), not O(depth) — this keeps 94-layer compiles fast.  The butterfly
+split cuts the flat list at the configured boundary, producing two stages;
+the butterfly unit (the paper's contribution) runs between them.
+
+Layer kinds: mixer in {attn, mamba, mlstm, slstm} x ffn in {mlp, moe, None};
+``shared=True`` marks zamba2's shared-parameter attention block; ``cross``
+adds whisper-style cross attention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import apply_mlp, init_mlp, init_rms_norm, rms_norm
+from repro.models.parallel import LOCAL, ParallelContext
+
+# Dry-run knob: when True, segment scans fully unroll so XLA's cost analysis
+# (which counts while-loop bodies once) reports exact per-step FLOPs/bytes.
+# An int k unrolls k iterations per while step (the two-point scan-correction
+# probe in launch/dryrun.py). Training/serving keep scans rolled.
+SCAN_UNROLL = False
+
+
+def _scan_unroll(repeats: int) -> int:
+    if SCAN_UNROLL is True:
+        return repeats
+    if SCAN_UNROLL:
+        return min(int(SCAN_UNROLL), repeats)
+    return 1
+
+# ---------------------------------------------------------------------------
+# layer defs and segmentation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    mixer: str                      # attn | mamba | mlstm | slstm
+    ffn: Optional[str] = "mlp"      # mlp | moe | None
+    window: Optional[int] = None
+    shared: bool = False            # zamba2 shared-attention params
+    cross: bool = False             # whisper decoder cross-attention
+
+
+@dataclass(frozen=True)
+class Segment:
+    unit: Tuple[LayerDef, ...]
+    repeats: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.unit) * self.repeats
+
+
+def build_layer_defs(cfg: ModelConfig, long_mode: bool = False) -> List[LayerDef]:
+    """The flat per-layer spec for an architecture.
+
+    ``long_mode`` — the long_500k sub-quadratic variant: every attention layer
+    runs with a bounded window (cfg.long_context_window)."""
+    defs: List[LayerDef] = []
+    for i in range(cfg.num_layers):
+        if cfg.xlstm is not None:
+            every = cfg.xlstm.slstm_every
+            mixer = "slstm" if (i % every == every - 1) else "mlstm"
+            defs.append(LayerDef(mixer=mixer, ffn=None))
+            continue
+        if cfg.hybrid_attn_every is not None:
+            if i % cfg.hybrid_attn_every == cfg.hybrid_attn_every - 1:
+                window = cfg.long_context_window if long_mode else None
+                defs.append(LayerDef(mixer="attn", ffn="mlp", shared=True,
+                                     window=window))
+            else:
+                defs.append(LayerDef(mixer="mamba", ffn=None))
+            continue
+        if cfg.arch_type == "ssm" and cfg.ssm is not None:
+            defs.append(LayerDef(mixer="mamba", ffn=None))
+            continue
+        # attention archs
+        window = None
+        if cfg.sliding_window is not None:
+            if cfg.global_every is None or (i % cfg.global_every != cfg.global_every - 1):
+                window = cfg.sliding_window
+            elif long_mode:
+                window = cfg.long_context_window
+        elif long_mode and cfg.long_context_window is not None:
+            window = cfg.long_context_window
+        ffn = "mlp"
+        if cfg.moe is not None and (i % cfg.moe.every == cfg.moe.every - 1):
+            ffn = "moe"
+        defs.append(LayerDef(mixer="attn", ffn=ffn, window=window,
+                             cross=cfg.is_encdec))
+    return defs
+
+
+def segmentize(defs: Sequence[LayerDef]) -> List[Segment]:
+    """Compress a flat def list into repeated-unit segments (greedy)."""
+    defs = list(defs)
+    if not defs:
+        return []
+    best = None
+    for u in range(1, min(len(defs), 8) + 1):
+        unit = tuple(defs[:u])
+        reps = 1
+        while (reps + 1) * u <= len(defs) and tuple(defs[reps * u:(reps + 1) * u]) == unit:
+            reps += 1
+        covered = reps * u
+        # prefer covering more layers with fewer scans; tie-break small unit
+        score = (covered, -u)
+        if best is None or score > best[0]:
+            best = (score, unit, reps)
+    _, unit, reps = best
+    head = [Segment(unit=unit, repeats=reps)]
+    return head + segmentize(defs[len(unit) * reps:])
+
+
+def split_defs(defs: Sequence[LayerDef], boundary: Optional[int]) -> List[List[Segment]]:
+    """Stage list for a butterfly at ``boundary`` (layers [0,b) | [b,N))."""
+    if boundary is None:
+        return [segmentize(defs)]
+    assert 0 < boundary < len(defs), boundary
+    return [segmentize(defs[:boundary]), segmentize(defs[boundary:])]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _prepend_none(spec_tree):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def init_layer(key, ldef: LayerDef, cfg: ModelConfig, dtype):
+    params: dict = {}
+    specs: dict = {}
+    ks = iter(jax.random.split(key, 8))
+    params["norm1"], specs["norm1"] = init_rms_norm(cfg.d_model, dtype)
+    if ldef.mixer == "attn":
+        if not ldef.shared:   # shared params are stored once at the top level
+            params["mixer"], specs["mixer"] = attn.init_attention(next(ks), cfg, dtype)
+        if ldef.cross:
+            params["norm_cross"], specs["norm_cross"] = init_rms_norm(cfg.d_model, dtype)
+            params["cross"], specs["cross"] = attn.init_attention(next(ks), cfg, dtype)
+    elif ldef.mixer == "mamba":
+        params["mixer"], specs["mixer"] = ssm_lib.init_mamba(next(ks), cfg, dtype)
+    elif ldef.mixer == "mlstm":
+        params["mixer"], specs["mixer"] = xlstm_lib.init_mlstm(next(ks), cfg, dtype)
+    elif ldef.mixer == "slstm":
+        params["mixer"], specs["mixer"] = xlstm_lib.init_slstm(next(ks), cfg, dtype)
+    else:
+        raise ValueError(ldef.mixer)
+    if ldef.ffn is not None and ldef.mixer == "attn":
+        params["norm2"], specs["norm2"] = init_rms_norm(cfg.d_model, dtype)
+        if ldef.ffn == "mlp" and not ldef.shared:
+            params["ffn"], specs["ffn"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff, dtype)
+        elif ldef.ffn == "moe":
+            params["ffn"], specs["ffn"] = moe_lib.init_moe(next(ks), cfg, dtype)
+    return params, specs
+
+
+def layer_specs(ldef: LayerDef, cfg: ModelConfig, dtype):
+    """Sharding specs for one layer, computed without allocating params."""
+    captured = {}
+
+    def fn(k):
+        p, s = init_layer(k, ldef, cfg, dtype)
+        captured["s"] = s
+        return p
+
+    jax.eval_shape(fn, jax.random.key(0))
+    return captured["s"]
+
+
+def init_segment(key, seg: Segment, cfg: ModelConfig, dtype):
+    """Returns ([params per unit pos, stacked over repeats], matching specs)."""
+    unit_params, unit_specs = [], []
+    keys = jax.random.split(key, len(seg.unit))
+    for ldef, k in zip(seg.unit, keys):
+        rep_keys = jax.random.split(k, seg.repeats)
+        p = jax.vmap(lambda kk: init_layer(kk, ldef, cfg, dtype)[0])(rep_keys)
+        unit_params.append(p)
+        unit_specs.append(_prepend_none(layer_specs(ldef, cfg, dtype)))
+    return unit_params, unit_specs
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(ldef: LayerDef, cfg: ModelConfig, batch: int, length: int,
+                     dtype):
+    """Cache template (zeros) for one layer in decode mode."""
+    if ldef.mixer == "attn":
+        cache_len = min(length, ldef.window) if ldef.window else length
+        c = {"kv": attn.init_kv_cache(cfg, batch, cache_len, dtype)}
+        if ldef.cross:
+            hd = cfg.resolved_head_dim
+            c["cross_kv"] = {
+                "k": jnp.zeros((batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+            }
+        return c
+    if ldef.mixer == "mamba":
+        return ssm_lib.init_ssm_state(cfg, batch, dtype)
+    if ldef.mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(cfg, batch, dtype)
+    if ldef.mixer == "slstm":
+        return xlstm_lib.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(ldef.mixer)
+
+
+def layer_cache_spec(ldef: LayerDef, batch_axis, seq_axis):
+    if ldef.mixer == "attn":
+        c = {"kv": attn.kv_cache_spec(batch_axis, seq_axis)}
+        if ldef.cross:
+            c["cross_kv"] = attn.kv_cache_spec(batch_axis, None)
+        return c
+    if ldef.mixer == "mamba":
+        return ssm_lib.ssm_state_spec(batch_axis)
+    if ldef.mixer == "mlstm":
+        return {"C": P(batch_axis, None, None, None), "n": P(batch_axis, None, None),
+                "conv": P(batch_axis, None, None)}
+    if ldef.mixer == "slstm":
+        return {k: P(batch_axis, None, None) for k in ("c", "n", "h", "m")}
+    raise ValueError(ldef.mixer)
+
+
+def to_ring(kv: dict, window: int) -> dict:
+    """Arrange the last ``window`` positions of a full-seq KV into ring order."""
+    S = kv["k"].shape[1]
+    if S <= window:
+        return kv
+    tail = {k: v[:, -window:] for k, v in kv.items()}
+    slots = (jnp.arange(S - window, S)) % window
+    return {k: jnp.zeros_like(v).at[:, slots].set(v) for k, v in tail.items()}
+
+
+def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
+                pctx: ParallelContext, mode: str, cache, pos,
+                enc_out=None, shared_params=None, use_kernel: bool = False,
+                causal: bool = True):
+    """Returns (x, new_cache, aux_vec[2])."""
+    aux = jnp.zeros((2,), jnp.float32)
+    new_cache = None
+    p = dict(lparams)
+    if ldef.shared:
+        p["mixer"] = shared_params["mixer"]
+        p["ffn"] = shared_params["ffn"]
+
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    rope = not cfg.is_encdec          # whisper uses sinusoid embeds, no RoPE
+    if ldef.mixer == "attn":
+        if mode == "decode":
+            out, kv = attn.attention_decode(
+                p["mixer"], h, cache["kv"], pos, cfg=cfg, window=ldef.window,
+                rope=rope)
+            new_cache = {"kv": kv}
+        else:
+            out, kv = attn.attention_fullseq(
+                p["mixer"], h, cfg=cfg, window=ldef.window,
+                use_kernel=use_kernel, causal=causal, rope=rope)
+            if mode == "prefill":
+                new_cache = {"kv": to_ring(kv, ldef.window) if ldef.window else kv}
+        x = x + out
+        if ldef.cross:
+            hc = rms_norm(x, p["norm_cross"], cfg.rms_eps)
+            if mode == "decode":
+                ckv = cache["cross_kv"]
+            else:
+                ckv = attn.encoder_kv(p["cross"], enc_out, cfg=cfg)
+            x = x + attn.cross_attention(p["cross"], hc, ckv, cfg=cfg)
+            if mode == "prefill":
+                new_cache["cross_kv"] = ckv
+            elif mode == "decode":
+                new_cache["cross_kv"] = ckv
+        if ldef.ffn is not None:
+            h2 = rms_norm(x, p["norm2"], cfg.rms_eps)
+            if ldef.ffn == "mlp":
+                x = x + apply_mlp(p["ffn"], h2, cfg.act)
+            else:
+                out, moe_aux = moe_lib.apply_moe(p["ffn"], h2, cfg=cfg,
+                                                 pctx=pctx, act=cfg.act)
+                x = x + out
+                aux = aux + jnp.stack([moe_aux["load_balance"],
+                                       moe_aux["router_z"]])
+    elif ldef.mixer == "mamba":
+        if mode == "decode":
+            out, st = ssm_lib.mamba_decode(p["mixer"], h, cache, cfg=cfg)
+            new_cache = st
+        else:
+            out, st = ssm_lib.mamba_fullseq(p["mixer"], h, cfg=cfg,
+                                            return_state=(mode == "prefill"))
+            new_cache = st
+        x = x + out
+    elif ldef.mixer == "mlstm":
+        if mode == "decode":
+            out, st = xlstm_lib.mlstm_decode(p["mixer"], h, cache, cfg=cfg)
+        else:
+            out, st = xlstm_lib.mlstm_fullseq(p["mixer"], h, cfg=cfg,
+                                              return_state=(mode == "prefill"))
+        new_cache = st
+        x = x + out
+    elif ldef.mixer == "slstm":
+        if mode == "decode":
+            out, st = xlstm_lib.slstm_decode(p["mixer"], h, cache, cfg=cfg)
+        else:
+            out, st = xlstm_lib.slstm_fullseq(p["mixer"], h, cfg=cfg,
+                                              return_state=(mode == "prefill"))
+        new_cache = st
+        x = x + out
+    else:
+        raise ValueError(ldef.mixer)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# segment / stage apply (scan over repeats)
+# ---------------------------------------------------------------------------
+
+
+def apply_segment(seg: Segment, seg_params, x, *, cfg, pctx, mode, seg_cache,
+                  pos, enc_out=None, shared_params=None, use_kernel=False,
+                  causal=True):
+    """seg_params: list per unit pos of stacked params; seg_cache likewise."""
+
+    def body(carry, xs):
+        xc, aux_sum = carry
+        unit_params, unit_cache = xs
+        new_caches = []
+        for i, ldef in enumerate(seg.unit):
+            c = None if unit_cache is None else unit_cache[i]
+            xc, nc, aux = apply_layer(
+                ldef, unit_params[i], xc, cfg=cfg, pctx=pctx, mode=mode,
+                cache=c, pos=pos, enc_out=enc_out, shared_params=shared_params,
+                use_kernel=use_kernel, causal=causal)
+            new_caches.append(nc)
+        return (xc, aux_sum + aux), new_caches
+
+    xs = (seg_params, seg_cache)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((2,), jnp.float32)), xs, length=seg.repeats,
+        unroll=_scan_unroll(seg.repeats))
+    return x, new_cache, aux
+
+
+def apply_stage(segments: List[Segment], stage_params, x, *, cfg, pctx, mode,
+                stage_cache, pos, enc_out=None, shared_params=None,
+                use_kernel=False, causal=True):
+    aux_total = jnp.zeros((2,), jnp.float32)
+    new_caches = []
+    for si, seg in enumerate(segments):
+        cache = None if stage_cache is None else stage_cache[si]
+        x, nc, aux = apply_segment(
+            seg, stage_params[si], x, cfg=cfg, pctx=pctx, mode=mode,
+            seg_cache=cache, pos=pos, enc_out=enc_out,
+            shared_params=shared_params, use_kernel=use_kernel, causal=causal)
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# stacked cache init/specs for a stage
+# ---------------------------------------------------------------------------
+
+
+def init_stage_cache(segments: List[Segment], cfg, batch, length, dtype):
+    out = []
+    for seg in segments:
+        unit = []
+        for ldef in seg.unit:
+            c = init_layer_cache(ldef, cfg, batch, length, dtype)
+            unit.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape), c))
+        out.append(unit)
+    return out
+
+
+def stage_cache_spec(segments: List[Segment], batch_axis, seq_axis):
+    out = []
+    for seg in segments:
+        unit = []
+        for ldef in seg.unit:
+            s = layer_cache_spec(ldef, batch_axis, seq_axis)
+            unit.append(_prepend_none(s))
+        out.append(unit)
+    return out

@@ -1,0 +1,280 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with exponential gating).
+
+Simplifications vs. the reference CUDA implementation (documented in
+DESIGN.md): the mLSTM max-stabilizer ``m_t`` is replaced by the bounded
+log-sigmoid forget-gate cumulative form (all decays <= 1, so the chunkwise
+exponentials cannot overflow) and the denominator uses the paper's
+``max(|q . n|, 1)`` floor.  sLSTM keeps the full i/f/z/o exponential-gating
+recurrence with the stabilizer, block-diagonal (per-head) recurrent weights,
+run under ``lax.scan``.
+
+Decode state:
+  mLSTM: {"C": (B,H,P,P) f32, "n": (B,H,P) f32, "conv": (B,W-1,d_inner)}
+  sLSTM: {"c","n","h","m": (B,H,P) f32}
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, dense_spec, rms_norm
+from repro.models.parallel import ParallelContext
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    Pd = d_inner // H
+    return x, d_inner, H, Pd
+
+
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    Pd = cfg.d_model // H
+    return H, Pd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    x, d_inner, H, Pd = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    params = {
+        "up_z": dense_init(ks[0], d, d_inner, dtype),
+        "up_x": dense_init(ks[1], d, d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[2], (x.conv_width, d_inner), jnp.float32)
+                   / math.sqrt(x.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": dense_init(ks[3], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[4], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[5], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[6], d_inner, 2 * H, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "down": dense_init(ks[7], d_inner, d, dtype, scale=1.0 / d_inner),
+    }
+    specs = {
+        "up_z": dense_spec((d, d_inner), 1), "up_x": dense_spec((d, d_inner), 1),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "wq": P(None, None), "wk": P(None, None), "wv": P(None, None),
+        "w_if": P(None, None), "b_if": P(None),
+        "norm_w": P(None), "down": dense_spec((d_inner, d), 0),
+    }
+    return params, specs
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    x, d_inner, H, Pd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, Pd, Pd), jnp.float32),
+        "n": jnp.zeros((batch, H, Pd), jnp.float32),
+        "conv": jnp.zeros((batch, x.conv_width - 1, d_inner), dtype),
+    }
+
+
+def _mlstm_gates(params, xi):
+    """xi: (B,S,d_inner) -> log_i, log_f (B,S,H) in f32, bounded."""
+    g = xi.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    H = g.shape[-1] // 2
+    log_i = -jax.nn.softplus(-g[..., :H])       # log sigmoid(i~): <= 0
+    log_f = -jax.nn.softplus(-g[..., H:])       # log sigmoid(f~): <= 0
+    return log_i, log_f
+
+
+def _conv_silu(xi, conv_w, conv_b, width):
+    out = xi * conv_w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xi, ((0, 0), (i, 0), (0, 0)))[:, :xi.shape[1]]
+        out = out + shifted * conv_w[-1 - i]
+    return jax.nn.silu(out + conv_b)
+
+
+def mlstm_fullseq(params, x, *, cfg: ModelConfig, return_state: bool = False):
+    xcfg, d_inner, H, Pd = _mlstm_dims(cfg)
+    Bsz, S, _ = x.shape
+    L = min(xcfg.chunk_size, S)
+    assert S % L == 0
+    C = S // L
+
+    z = jax.nn.silu(x @ params["up_z"])
+    xi = x @ params["up_x"]
+    xi = _conv_silu(xi, params["conv_w"], params["conv_b"], xcfg.conv_width)
+    q = (xi @ params["wq"]).reshape(Bsz, S, H, Pd) / math.sqrt(Pd)
+    k = (xi @ params["wk"]).reshape(Bsz, S, H, Pd)
+    v = (xi @ params["wv"]).reshape(Bsz, S, H, Pd)
+    log_i, log_f = _mlstm_gates(params, xi)
+
+    qc = q.reshape(Bsz, C, L, H, Pd).astype(jnp.float32)
+    kc = k.reshape(Bsz, C, L, H, Pd).astype(jnp.float32)
+    vc = v.reshape(Bsz, C, L, H, Pd).astype(jnp.float32)
+    lic = log_i.reshape(Bsz, C, L, H)
+    cumf = jnp.cumsum(log_f.reshape(Bsz, C, L, H), axis=2)        # <= 0
+
+    # intra-chunk: D[i,j] = exp(cumf_i - cumf_j + log_i_j), i >= j
+    seg = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + lic[:, :, None, :, :]
+    mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, None, :, :, None]
+    # mask before exp (see ssm.py): avoids 0 * inf = NaN in the backward
+    D = jnp.exp(jnp.where(mask, seg, -1e9))                       # (B,C,L,L,H)
+    scores = jnp.einsum("bcihp,bcjhp->bcijh", qc, kc)
+    num_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * D, vc)
+    den_intra = jnp.einsum("bcijh->bcih", scores * D)
+
+    # chunk state contributions
+    last = cumf[:, :, -1:, :]
+    w = jnp.exp(last - cumf + lic)                                # (B,C,L,H)
+    C_chunk = jnp.einsum("bclh,bclhp,bclhq->bchpq", w, vc, kc)    # v k^T
+    n_chunk = jnp.einsum("bclh,bclhp->bchp", w, kc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])
+
+    def step(carry, inputs):
+        Cs, ns = carry
+        C_c, n_c, dec, q_c, cumf_c = inputs
+        yq = jnp.einsum("blhp,bhqp->blhq", q_c, Cs) * jnp.exp(cumf_c)[..., None]
+        dq = jnp.einsum("blhp,bhp->blh", q_c, ns) * jnp.exp(cumf_c)
+        Cs = Cs * dec[:, :, None, None] + C_c
+        ns = ns * dec[:, :, None] + n_c
+        return (Cs, ns), (yq, dq)
+
+    init = (jnp.zeros((Bsz, H, Pd, Pd), jnp.float32),
+            jnp.zeros((Bsz, H, Pd), jnp.float32))
+    xs_scan = (C_chunk.transpose(1, 0, 2, 3, 4), n_chunk.transpose(1, 0, 2, 3),
+               chunk_decay.transpose(1, 0, 2), qc.transpose(1, 0, 2, 3, 4),
+               cumf.transpose(1, 0, 2, 3))
+    (C_fin, n_fin), (num_inter, den_inter) = jax.lax.scan(step, init, xs_scan)
+    num = num_intra + num_inter.transpose(1, 0, 2, 3, 4)
+    den = den_intra + den_inter.transpose(1, 0, 2, 3)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.rms_eps) * z
+    out = y @ params["down"]
+    if return_state:
+        state = {"C": C_fin, "n": n_fin,
+                 "conv": (x @ params["up_x"])[:, -(xcfg.conv_width - 1):, :]}
+        return out, state
+    return out, None
+
+
+def mlstm_decode(params, x, state, *, cfg: ModelConfig):
+    xcfg, d_inner, H, Pd = _mlstm_dims(cfg)
+    Bsz = x.shape[0]
+    z = jax.nn.silu(x @ params["up_z"])[:, 0]                     # (B,di)
+    xi_new = (x @ params["up_x"])                                  # (B,1,di)
+    window = jnp.concatenate([state["conv"], xi_new], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    xi = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    q = (xi @ params["wq"]).reshape(Bsz, H, Pd).astype(jnp.float32) / math.sqrt(Pd)
+    k = (xi @ params["wk"]).reshape(Bsz, H, Pd).astype(jnp.float32)
+    v = (xi @ params["wv"]).reshape(Bsz, H, Pd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(params, xi[:, None, :])
+    i_t = jnp.exp(log_i[:, 0])                                    # (B,H)
+    f_t = jnp.exp(log_f[:, 0])
+
+    C = state["C"] * f_t[:, :, None, None] + \
+        i_t[:, :, None, None] * jnp.einsum("bhp,bhq->bhpq", v, k)
+    n = state["n"] * f_t[:, :, None] + i_t[:, :, None] * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)), 1.0)
+    y = (num / den[..., None]).reshape(Bsz, d_inner).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.rms_eps) * z
+    out = (y @ params["down"])[:, None, :]
+    return out, {"C": C, "n": n, "conv": window[:, 1:, :].astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    H, Pd = _slstm_dims(cfg)
+    d = cfg.d_model
+    d_ff = max(int(d * 8 / 3) // 64 * 64, 64)
+    ks = jax.random.split(key, 4)
+    params = {
+        "w_in": dense_init(ks[0], d, 4 * d, jnp.float32),          # i,f,z,o pre-acts
+        "r": (jax.random.normal(ks[1], (4, H, Pd, Pd), jnp.float32)
+              / math.sqrt(Pd)),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]),
+        "norm_w": jnp.zeros((d,), dtype),
+        "w_ff1": dense_init(ks[2], d, d_ff, dtype),
+        "w_ff2": dense_init(ks[3], d_ff, d, dtype, scale=1.0 / d_ff),
+    }
+    specs = {
+        "w_in": P(None, None), "r": P(None, None, None, None), "b": P(None),
+        "norm_w": P(None),
+        "w_ff1": dense_spec((d, d_ff), 1), "w_ff2": dense_spec((d_ff, d), 0),
+    }
+    return params, specs
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, Pd = _slstm_dims(cfg)
+    zeros = jnp.zeros((batch, H, Pd), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros, "m": zeros - 10.0}
+
+
+def _slstm_step(params, carry, pre, H, Pd):
+    """One sLSTM time-step. pre: (B, 4d) input pre-activations (f32)."""
+    c, n, h, m = carry
+    B = pre.shape[0]
+    pre = pre.reshape(B, 4, H, Pd)
+    rec = jnp.einsum("ghpq,bhq->gbhp", params["r"], h).transpose(1, 0, 2, 3)
+    g = pre + rec                                                  # (B,4,H,P)
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    log_f = -jax.nn.softplus(-gf)                                  # log sigmoid
+    m_new = jnp.maximum(log_f + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_fullseq(params, x, *, cfg: ModelConfig, return_state: bool = False):
+    H, Pd = _slstm_dims(cfg)
+    Bsz, S, d = x.shape
+    pre = (x.astype(jnp.float32) @ params["w_in"] + params["b"])   # (B,S,4d)
+    init = (jnp.zeros((Bsz, H, Pd), jnp.float32),) * 3 + \
+           (jnp.full((Bsz, H, Pd), -10.0, jnp.float32),)
+
+    def step(carry, p):
+        return _slstm_step(params, carry, p, H, Pd)
+
+    carry, hs = jax.lax.scan(step, init, pre.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(Bsz, S, d).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.rms_eps)
+    y = y + jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"]
+    if return_state:
+        c, n, h, m = carry
+        return y, {"c": c, "n": n, "h": h, "m": m}
+    return y, None
+
+
+def slstm_decode(params, x, state, *, cfg: ModelConfig):
+    H, Pd = _slstm_dims(cfg)
+    Bsz, _, d = x.shape
+    pre = (x[:, 0].astype(jnp.float32) @ params["w_in"] + params["b"])
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(params, carry, pre, H, Pd)
+    y = h.reshape(Bsz, 1, d).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.rms_eps)
+    y = y + jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"]
+    c, n, hh, m = carry
+    return y, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.pipeline import make_split_pipeline, wire_stats
+
+__all__ = ["Request", "ServingEngine", "make_split_pipeline", "wire_stats"]

@@ -1,0 +1,148 @@
+"""Batched serving engine: continuous-batching style prefill/decode with a
+slot-based KV/state cache pool.
+
+Real-engine behaviours kept: per-request positions (ragged decode), slot
+reuse on completion, greedy or temperature sampling, max-token and EOS
+stopping.  Kept honest-but-small: requests prefill one at a time (the
+pipeline/pod path in serving/pipeline.py is the paper's split deployment;
+this engine is the single-mesh baseline the paper calls "cloud-only" or
+"mobile-only" depending on where it runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.models.parallel import LOCAL, ParallelContext
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: list = dataclasses.field(default_factory=list)
+    logits_history: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, built: M.BuiltModel, *, max_batch: int = 8,
+                 max_len: int = 512, pctx: ParallelContext = LOCAL, seed: int = 0):
+        self.params = params
+        self.built = built
+        self.cfg = built.cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.pctx = pctx
+        dt = jnp.dtype(self.cfg.dtype)
+        self.cache = [tfm.init_stage_cache(list(segs), self.cfg, max_batch,
+                                           max_len, dt)
+                      for segs in built.stages]
+        self.positions = np.zeros((max_batch,), np.int32)   # next write pos
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(self._decode_fn)
+        self._uid = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      eos_id=eos_id)
+        self._uid += 1
+        slot = self._free_slot()
+        self._prefill_into(slot, req)
+        return req
+
+    def run(self, requests_done: Callable[[], bool] = None, max_steps: int = 10_000):
+        steps = 0
+        while any(r is not None for r in self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+
+    # ------------------------------------------------------------- internals
+    def _free_slot(self) -> int:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        raise RuntimeError("engine full; drain before submitting")
+
+    def _prefill_into(self, slot: int, req: Request):
+        S = len(req.prompt)
+        assert S < self.max_len, "prompt exceeds cache"
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        logits, caches = M.forward_prefill(self.params, self.built, batch,
+                                           self.pctx)
+        self._write_slot(slot, caches)
+        self.positions[slot] = S
+        self.active[slot] = req
+        req.logits_history.append(jax.device_get(logits[0, -1]))
+        req.generated.append(self._sample(logits[0, -1], req))
+
+    def _write_slot(self, slot: int, req_cache):
+        """Copy a single-request cache into batch slot ``slot`` of the pool,
+        padding the seq axis of attention caches up to max_len/window."""
+        def copy(pool, new):
+            # leaves: stacked (repeats, B, ...) pools vs (repeats, 1, ...) new
+            pad = [(0, 0)] * new.ndim
+            changed = False
+            for ax in range(2, new.ndim):
+                if new.shape[ax] < pool.shape[ax]:
+                    pad[ax] = (0, pool.shape[ax] - new.shape[ax])
+                    changed = True
+            if changed:
+                new = jnp.pad(new, pad)
+            start = [0, slot] + [0] * (new.ndim - 2)
+            return jax.lax.dynamic_update_slice(pool, new.astype(pool.dtype),
+                                                tuple(start))
+
+        self.cache = jax.tree.map(copy, self.cache, req_cache)
+
+    def _decode_fn(self, params, tokens, caches, pos):
+        return M.forward_decode(params, self.built, tokens, caches, pos,
+                                self.pctx)
+
+    def _sample(self, logits, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / req.temperature))
+
+    def step(self):
+        """One batched decode step over all active slots."""
+        if not any(r is not None for r in self.active):
+            return
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None and r.generated:
+                last[i, 0] = r.generated[-1]
+        # .copy() is load-bearing: on the CPU backend jnp.asarray can alias
+        # the numpy buffer zero-copy, and the in-place `positions[i] += 1`
+        # below would race with the still-dispatching decode (observed as a
+        # rare wrong-slot cache write under load)
+        pos = jnp.asarray(self.positions.copy())
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache, pos)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.positions[i] += 1
+            tok = self._sample(logits[i, 0], r)
+            r.logits_history.append(jax.device_get(logits[i, 0]))
+            r.generated.append(tok)
+            if (r.eos_id is not None and tok == r.eos_id) or \
+                    len(r.generated) >= r.max_new_tokens or \
+                    self.positions[i] >= self.max_len - 1:
+                r.done = True
+                self.active[i] = None

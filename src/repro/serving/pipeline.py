@@ -1,0 +1,167 @@
+"""The paper's deployment, TPU-native: a 2-stage microbatched pipeline over
+the ``pod`` mesh axis with the butterfly unit at the stage boundary.
+
+Pod 0 ("edge") computes layers [0, j) + the reduction unit + int8 wire
+quantization; a single ``lax.ppermute`` per tick carries ONLY the quantized
+codes + f32 scales across the pod boundary (this is the paper's compressed
+uplink, visible in the HLO as a collective-permute of an int8 tensor);
+pod 1 ("cloud") dequantizes, restores, runs layers [j, N) and the LM head,
+and the last-token logits ride the same ppermute back ("the inference
+outcome is sent back to the mobile device").
+
+Scope: scoring/prefill pipeline (the paper's single-forward inference),
+dense/ssm/hybrid archs; params are replicated within a stage (the edge-side
+model is small by construction — that is the paper's point).  Model-parallel
+stages and decode pipelining are listed as extensions in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quantization import dequantize, quantize
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.models.common import embed, rms_norm, unembed
+from repro.models.parallel import LOCAL
+
+
+def wire_stats(cfg, microbatch: int, seq: int) -> dict:
+    """Bytes crossing the pod boundary per microbatch tick."""
+    d_r = cfg.butterfly.d_r
+    act_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    wire = microbatch * seq * d_r * cfg.butterfly.wire_bits // 8 + \
+        microbatch * seq * 4
+    raw = microbatch * seq * cfg.d_model * act_bytes
+    return {"wire_bytes": wire, "raw_boundary_bytes": raw,
+            "compression": raw / wire}
+
+
+def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
+                        seq_len: int, microbatch: int,
+                        wire_mode: str = "int8"):
+    """Returns jit-able ``pipeline_fn(params, tokens) -> last-token logits``.
+
+    tokens: (num_microbatches * microbatch, seq_len) int32, sharded over the
+    'data' axis on the batch dim; requires a 'pod' axis of size 2.
+
+    wire_mode — what crosses the pod boundary (the perf-iteration knob):
+      "raw"     vanilla collaborative intelligence: the full (mb, S, d_model)
+                activation in model dtype (prior work [6]-[12])
+      "reduced" butterfly reduction only, no quantization: (mb, S, d_r) dtype
+      "int8"    the paper: reduction + int8 wire (codes + f32 scales)
+    """
+    cfg = built.cfg
+    assert built.has_butterfly and len(built.stages) == 2, \
+        "pipeline needs a butterfly split (cfg.with_butterfly(...))"
+    assert cfg.moe is None, "MoE pipeline stages are a documented extension"
+    n_pods = mesh.shape["pod"]
+    assert n_pods == 2, "2-stage pipeline: edge pod + cloud pod"
+    d_r = cfg.butterfly.d_r
+    V = cfg.vocab_size
+    d = cfg.d_model
+    Mmb = num_microbatches
+    dt = jnp.dtype(cfg.dtype)
+
+    assert wire_mode in ("raw", "reduced", "int8"), wire_mode
+
+    def stage_edge(params, toks):
+        scale = cfg.arch_type == "dense" and cfg.act == "gelu"
+        x = embed(params["embed"], toks, scale=scale)
+        x, _, _ = tfm.apply_stage(
+            list(built.stages[0]), params["stages"][0], x, cfg=cfg,
+            pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+            shared_params=params.get("shared_attn"))
+        if wire_mode == "raw":
+            return x, jnp.zeros((x.shape[0], seq_len, 1), jnp.float32)
+        r = x @ params["butterfly"]["w_reduce"]
+        if wire_mode == "reduced":
+            return r, jnp.zeros((r.shape[0], seq_len, 1), jnp.float32)
+        codes, scales = quantize(r, cfg.butterfly.wire_bits)
+        return codes, scales
+
+    def stage_cloud(params, codes, scales):
+        if wire_mode == "raw":
+            x = codes
+            x, _, _ = tfm.apply_stage(
+                list(built.stages[1]), params["stages"][1], x, cfg=cfg,
+                pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+                shared_params=params.get("shared_attn"))
+            x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x)[:, 0]
+        r = codes if wire_mode == "reduced" else dequantize(codes, scales, dt)
+        x = r @ params["butterfly"]["w_restore"]
+        x, _, _ = tfm.apply_stage(
+            list(built.stages[1]), params["stages"][1], x, cfg=cfg,
+            pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+            shared_params=params.get("shared_attn"))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        return unembed(table, x)[:, 0]                      # (mb, V)
+
+    def shard_body(params, tokens):
+        pod = jax.lax.axis_index("pod")
+        mb_toks = tokens.reshape(Mmb, -1, seq_len)
+        mb = mb_toks.shape[1]
+
+        if wire_mode == "raw":
+            wire_shape, wire_dtype = (mb, seq_len, d), dt
+        elif wire_mode == "reduced":
+            wire_shape, wire_dtype = (mb, seq_len, d_r), dt
+        else:
+            wire_shape, wire_dtype = (mb, seq_len, d_r), jnp.int8
+        zero_wire = (jnp.zeros(wire_shape, wire_dtype),
+                     jnp.zeros((mb, seq_len, 1), jnp.float32))
+        zero_logits = jnp.zeros((mb, V), jnp.float32)
+
+        def tick(t, carry):
+            recv_codes, recv_scales, out, back = carry
+
+            def edge(_):
+                i = jnp.clip(t, 0, Mmb - 1)
+                toks = jax.lax.dynamic_index_in_dim(mb_toks, i, 0, False)
+                codes, scales = stage_edge(params, toks)
+                return codes, scales, zero_logits
+
+            def cloud(_):
+                logits = stage_cloud(params, recv_codes, recv_scales)
+                return zero_wire[0], zero_wire[1], logits
+
+            codes, scales, logits = jax.lax.cond(pod == 0, edge, cloud, None)
+            # the wire: int8 codes + scales cross 0 -> 1; logits cross 1 -> 0
+            codes = jax.lax.ppermute(codes, "pod", [(0, 1), (1, 0)])
+            scales = jax.lax.ppermute(scales, "pod", [(0, 1), (1, 0)])
+            logits_back = jax.lax.ppermute(logits, "pod", [(0, 1), (1, 0)])
+            out = jnp.where(t >= 1, out.at[jnp.maximum(t - 1, 0)].set(logits),
+                            out)
+            back = jnp.where(t >= 1, back.at[jnp.maximum(t - 1, 0)].set(logits_back),
+                             back)
+            return codes, scales, out, back
+
+        out0 = jnp.zeros((Mmb, mb, V), jnp.float32)
+        carry = (*zero_wire, out0, out0)
+        *_, out, back = jax.lax.fori_loop(0, Mmb + 1, tick, carry)
+        # pod 1 filled `out` locally; pod 0 received `back`. Select the live
+        # copy so the caller-visible result is pod-invariant.
+        result = jnp.where(pod == 0, back, out)
+        return result[None]                                  # add pod dim
+
+    axes = mesh.axis_names
+    data_ax = "data" if "data" in axes else None
+    fn = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), P(data_ax, None)),
+        out_specs=P("pod", None, data_ax, None),
+        check_vma=False,
+    )
+
+    def pipeline_fn(params, tokens):
+        res = fn(params, tokens)
+        return res[0].reshape(-1, V)                         # pod 0's copy
+
+    return pipeline_fn

@@ -1,0 +1,65 @@
+"""Numpy .npz checkpoints with pytree flattening (no orbax dependency).
+
+Keys encode the tree path; restore rebuilds against a template tree so list/
+dict structure (including the stacked segment params) round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: dict | None = None) -> str:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten_with_paths(opt_state).items()})
+    np.savez(path, **payload)
+    meta = dict(metadata or {}, step=step)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None):
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+
+    def rebuild(template, prefix):
+        flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat:
+            key = prefix + "/".join(str(x.key) if hasattr(x, "key") else str(x.idx)
+                                    for x in p)
+            arr = jnp.asarray(data[key], dtype=leaf.dtype)
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(tdef, leaves)
+
+    params = rebuild(params_template, "params/")
+    opt = rebuild(opt_template, "opt/") if opt_template is not None else None
+    meta = {}
+    if os.path.exists(path + ".meta.json"):
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+    return params, opt, meta

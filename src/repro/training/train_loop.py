@@ -1,0 +1,99 @@
+"""Training loop: loss, train_step (value_and_grad + AdamW), eval.
+
+``make_train_step`` returns a pure function suitable for jit/pjit; the
+launcher decides shardings.  MoE aux losses (load-balance, router-z) are
+added to the LM loss; the butterfly unit, when configured, trains end-to-end
+through the straight-through wire quantizer (the paper's key property).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.parallel import LOCAL, ParallelContext
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_loss_fn(built: M.BuiltModel, pctx: ParallelContext = LOCAL,
+                 use_kernel: bool = False):
+    def loss_fn(params, batch):
+        logits, aux = M.forward_train(params, built, batch, pctx, use_kernel)
+        # next-token objective: batch["targets"] is already shifted by the
+        # data pipeline (targets[t] = tokens[t+1], -1 where masked)
+        loss = M.lm_loss(logits, batch["targets"])
+        total = loss + aux["load_balance"] + aux["router_z"]
+        metrics = {"loss": loss, "load_balance": aux["load_balance"],
+                   "router_z": aux["router_z"]}
+        return total, metrics
+    return loss_fn
+
+
+def make_train_step(built: M.BuiltModel, opt_cfg: AdamWConfig,
+                    pctx: ParallelContext = LOCAL, use_kernel: bool = False,
+                    remat: bool = False, accum_steps: int = 1):
+    """``accum_steps > 1`` — gradient accumulation: the batch's leading dim
+    is split into ``accum_steps`` microbatches scanned sequentially; grads
+    are averaged before the single optimizer update.  Cuts peak activation
+    memory ~accum_steps x for the same global batch."""
+    loss_fn = make_loss_fn(built, pctx, use_kernel)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (total, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                 *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_sum, t_sum, m_sum = carry
+                (t, m), g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_sum, g), t_sum + t,
+                        jax.tree.map(jnp.add, m_sum, m)), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": 0.0, "load_balance": 0.0, "router_z": 0.0}
+            (g_sum, total, m_sum), _ = jax.lax.scan(
+                body, (zeros_g, 0.0, zeros_m), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            total = total / accum_steps
+            metrics = jax.tree.map(lambda m: m / accum_steps, m_sum)
+        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, total=total, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(built: M.BuiltModel, pctx: ParallelContext = LOCAL):
+    loss_fn = make_loss_fn(built, pctx)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+def init_train_state(key, built: M.BuiltModel):
+    params, specs = M.init_model(key, built)
+    opt_state = adamw_init(params)
+    return params, opt_state, specs
+
+
+def opt_state_specs(param_specs):
+    """Optimizer-state shardings mirror the param shardings."""
+    from jax.sharding import PartitionSpec as P
+    return {"mu": param_specs, "nu": param_specs, "step": P()}

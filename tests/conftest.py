@@ -1,0 +1,17 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: never set xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (the 512-device mesh belongs to launch/dryrun.py
+# only, and the pipeline test spawns a subprocess with its own flags).
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+def pytest_report_header(config):
+    return f"jax {jax.__version__}, devices={jax.device_count()}"

@@ -1,0 +1,111 @@
+"""MoE layer: routing/dispatch invariants, no-drop equivalence with a dense
+per-token loop oracle, capacity dropping, aux losses."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+from repro.models.parallel import LOCAL
+
+
+def _cfg(top_k=2, experts=4, cf=100.0):
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, top_k=top_k, num_experts=experts, capacity_factor=cf))
+
+
+def _dense_oracle(params, x, cfg):
+    """Per-token loop: run every token through its top-k experts densely."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = np.asarray(x.reshape(-1, d), np.float32)
+    logits = xf @ np.asarray(params["router"], np.float32)
+    probs = jax.nn.softmax(jnp.asarray(logits), -1)
+    gate, eids = jax.lax.top_k(probs, m.top_k)
+    gate = np.asarray(gate / jnp.sum(gate, -1, keepdims=True))
+    eids = np.asarray(eids)
+    wg = np.asarray(params["wg"], np.float32)
+    wu = np.asarray(params["wu"], np.float32)
+    wd = np.asarray(params["wd"], np.float32)
+    out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(m.top_k):
+            e = eids[t, j]
+            g = xf[t] @ wg[e]
+            u = xf[t] @ wu[e]
+            h = (g * jax.nn.sigmoid(jnp.asarray(g)) * u) if False else None
+            act = np.asarray(jax.nn.silu(jnp.asarray(g))) * u
+            out[t] += gate[t, j] * (act @ wd[e])
+    return out.reshape(B, S, d)
+
+
+def test_moe_matches_dense_oracle_no_drop():
+    cfg = _cfg(top_k=2, experts=4, cf=100.0)
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model)) * 0.5
+    out, aux = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    oracle = _dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), oracle, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_dropping_drops_tokens():
+    """With capacity_factor ~0, outputs collapse toward zero (all dropped)."""
+    cfg = _cfg(top_k=1, experts=4, cf=100.0)
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    full, _ = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    cfg_tight = _cfg(top_k=1, experts=4, cf=1e-9)
+    tight, _ = moe_lib.apply_moe(params, x, cfg=cfg_tight, pctx=LOCAL, act="silu")
+    # capacity 1: almost everything dropped
+    assert float(jnp.mean(jnp.abs(tight))) < float(jnp.mean(jnp.abs(full)))
+
+
+def test_aux_losses_finite_and_scaled():
+    cfg = _cfg()
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    _, aux = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    assert float(aux["load_balance"]) > 0
+    assert float(aux["router_z"]) >= 0
+
+
+def test_balanced_router_minimizes_lb_loss():
+    """Uniform routing yields load-balance loss ~= coefficient (E*1/E*1/E*E)."""
+    cfg = _cfg(top_k=1, experts=4)
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    params = dict(params, router=jnp.zeros_like(params["router"]))
+    x = jax.random.normal(jax.random.key(1), (4, 64, cfg.d_model))
+    _, aux = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    lb = float(aux["load_balance"]) / cfg.moe.load_balance_coef
+    assert lb == pytest.approx(1.0, rel=0.3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_dispatch_conservation(top_k, seed):
+    """Every kept (token, slot) contributes exactly gate_j * expert(x_t)."""
+    cfg = _cfg(top_k=top_k, experts=4, cf=100.0)
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(seed), (1, 8, cfg.d_model)) * 0.3
+    out, _ = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    oracle = _dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), oracle, rtol=5e-4, atol=5e-4)
+
+
+def test_shared_expert_added():
+    cfg = get_config("llama4-maverick-400b-a17b").reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=100.0))
+    params, _ = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 4, cfg.d_model)) * 0.3
+    with_shared, _ = moe_lib.apply_moe(params, x, cfg=cfg, pctx=LOCAL, act="silu")
+    no_shared_cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, shared_expert_ff=0))
+    without, _ = moe_lib.apply_moe(params, x, cfg=no_shared_cfg, pctx=LOCAL,
+                                   act="silu")
+    assert float(jnp.max(jnp.abs(with_shared - without))) > 1e-6

@@ -1,0 +1,97 @@
+"""Algorithm 1 tests, including exact reproduction of the paper's Table V
+selections and headline improvement factors from its own Table IV profile."""
+import pytest
+
+from repro.core.planner import (Selection, select_from_table, selection_phase,
+                                training_phase, profiling_phase,
+                                TrainingPhaseResult, plan_transformer_split)
+from repro.core.profiler import (GTX_1080TI, JETSON_TX2, PAPER_CLOUD_ONLY,
+                                 PAPER_MOBILE_ONLY, paper_profiles)
+from repro.core.wireless import INTER_POD, NETWORKS
+
+
+# Table V: chosen partitions per network (latency AND energy agree)
+PAPER_SELECTIONS = {"3g": 8, "4g": 1, "wifi": 1}
+
+
+@pytest.mark.parametrize("net", ["3g", "4g", "wifi"])
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_selection_reproduces_table5(net, objective):
+    profile = paper_profiles()[net]
+    assert select_from_table(profile, objective) == PAPER_SELECTIONS[net]
+
+
+def test_headline_improvements_match_paper():
+    """77x/40x/41x latency and 80x/54x/71x energy vs cloud-only (Sec III-B)."""
+    profs = paper_profiles()
+    expect_lat = {"3g": 77, "4g": 40, "wifi": 41}
+    expect_en = {"3g": 80, "4g": 54, "wifi": 71}
+    for net in NETWORKS:
+        sel = PAPER_SELECTIONS[net]
+        lat_x = PAPER_CLOUD_ONLY[net][0] / profs[net][sel]["latency_ms"]
+        en_x = PAPER_CLOUD_ONLY[net][1] / profs[net][sel]["energy_mj"]
+        assert round(lat_x) == expect_lat[net], (net, lat_x)
+        assert round(en_x) == expect_en[net], (net, en_x)
+
+
+def test_training_phase_linear_search():
+    """Minimal D_r found per split; monotone accuracy in D_r assumed."""
+    acc = {(1, 1): 0.75, (1, 2): 0.76,
+           (2, 1): 0.70, (2, 2): 0.73, (2, 3): 0.745,
+           (3, 1): 0.60, (3, 2): 0.65, (3, 3): 0.70, (3, 4): 0.75}
+
+    def train_eval(split, d_r):
+        return acc.get((split, d_r), 0.0)
+
+    res = training_phase([1, 2, 3], {1: 8, 2: 8, 3: 8}, train_eval,
+                         accuracy_target=0.76, max_loss=0.02)
+    assert [(r.split, r.d_r) for r in res] == [(1, 1), (2, 3), (3, 4)]
+
+
+def test_profiling_and_selection_roofline():
+    trained = [TrainingPhaseResult(1, 1, 0.75), TrainingPhaseResult(8, 5, 0.74)]
+
+    def costs(split, d_r):
+        # deeper split: more edge flops, less wire
+        edge = 1e9 * split
+        cloud = 1e9 * (16 - split)
+        wire = 4000 // split
+        return edge, edge / 10, cloud, cloud / 10, wire
+
+    profs = profiling_phase(trained, costs, JETSON_TX2, GTX_1080TI)
+    sel3g = selection_phase(profs, NETWORKS["3g"], "latency")
+    selwifi = selection_phase(profs, NETWORKS["wifi"], "latency")
+    # slow uplink -> deeper split wins; fast uplink -> shallow split wins
+    assert sel3g.split == 8
+    assert selwifi.split == 1
+
+
+def test_congestion_shifts_selection():
+    """Paper Sec III-C: cloud congestion pushes the split deeper."""
+    trained = [TrainingPhaseResult(j, 2, 0.75) for j in (1, 8)]
+
+    def costs(split, d_r):
+        edge = 5e8 * split
+        cloud = 5e9 * (16 - split)
+        wire = 3000 if split == 1 else 1000
+        return edge, 0, cloud, 0, wire
+
+    free = profiling_phase(trained, costs, JETSON_TX2, GTX_1080TI, cloud_load=0.0)
+    congested = profiling_phase(trained, costs, JETSON_TX2, GTX_1080TI,
+                                cloud_load=0.97)
+    net = NETWORKS["wifi"]
+    assert selection_phase(free, net).split == 1
+    assert selection_phase(congested, net).split == 8
+
+
+def test_plan_transformer_split_runs():
+    from repro.configs import get_config
+    from repro.core.profiler import TPU_V5E
+    cfg = get_config("qwen3-8b")
+    best, rows = plan_transformer_split(
+        cfg, seq=1024, batch=8, edge=TPU_V5E, cloud=TPU_V5E,
+        interconnect=INTER_POD, d_r=256,
+        candidate_splits=[1, 4, 12, 24, 35])
+    assert len(rows) == 5
+    assert best["split"] in {1, 4, 12, 24, 35}
+    assert all(r["compression"] > 1 for r in rows)

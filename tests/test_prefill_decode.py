@@ -1,0 +1,88 @@
+"""Serving-path correctness: prefill + single decode step must equal the
+full-sequence forward (per arch family, incl. windowed ring-buffer caches)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+
+ARCHS = ["qwen3-8b", "gemma3-12b", "xlstm-125m", "zamba2-7b", "whisper-base",
+         "pixtral-12b", "gemma-7b", "qwen3-14b", "llama4-maverick-400b-a17b"]
+
+
+def _pad_kv(c, total, prefill_len):
+    """Grow full-length KV caches to `total`; ring (windowed) caches keep
+    their length == window (their modulus) and are never padded."""
+    if isinstance(c, dict):
+        if set(c.keys()) >= {"k", "v"} and c["k"].ndim == 5:
+            out = {}
+            for kk in ("k", "v"):
+                x = c[kk]
+                if x.shape[2] == prefill_len and x.shape[2] < total:
+                    padw = [(0, 0)] * x.ndim
+                    padw[2] = (0, total - x.shape[2])
+                    out[kk] = jnp.pad(x, padw)
+                else:
+                    out[kk] = x
+            return out
+        return {k: _pad_kv(v, total, prefill_len) for k, v in c.items()}
+    if isinstance(c, list):
+        return [_pad_kv(v, total, prefill_len) for v in c]
+    return c
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_plus_decode_equals_full(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:     # avoid legitimate token-dropping differences
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    B, S = 2, 16
+    key = jax.random.key(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.num_patches:
+        batch["patches"] = jax.random.normal(key, (B, cfg.num_patches,
+                                                   cfg.d_model))
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_frames,
+                                                  cfg.d_model))
+    logits_full, _ = M.forward_train(params, built, batch)
+
+    batch_p = dict(batch)
+    batch_p["tokens"] = toks[:, :S - 1]
+    _, caches = M.forward_prefill(params, built, batch_p)
+    caches = _pad_kv(caches, S + cfg.num_patches, S - 1 + cfg.num_patches)
+    pos = jnp.asarray(S - 1 + cfg.num_patches, jnp.int32)
+    logits_d, _ = M.forward_decode(params, built, toks[:, S - 1:], caches, pos)
+
+    a = np.asarray(logits_full[:, -1])
+    b = np.asarray(logits_d[:, 0])
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_windowed_ring_buffer_decode():
+    """Sliding-window cache: decode far past the window stays exact."""
+    cfg = get_config("gemma3-12b").reduced()
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = M.forward_train(params, built, {"tokens": toks})
+
+    # prefill 12, decode 12 more one at a time
+    _, caches = M.forward_prefill(params, built, {"tokens": toks[:, :12]})
+    caches = _pad_kv(caches, S, 12)
+    for t in range(12, S):
+        logits_d, caches = M.forward_decode(params, built, toks[:, t:t + 1],
+                                            caches, jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_full[:, -1]),
+                               np.asarray(logits_d[:, 0]),
+                               rtol=2e-3, atol=2e-3)

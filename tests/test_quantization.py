@@ -1,0 +1,68 @@
+"""Property-based tests (hypothesis) for the int8 wire codec — the invariants
+the paper's wire format relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import dequantize, fake_quant, quantize, wire_bytes
+
+arrays = st.integers(1, 7).flatmap(
+    lambda rows: st.integers(2, 33).flatmap(
+        lambda cols: st.lists(
+            st.floats(-1e4, 1e4, allow_nan=False, width=32),
+            min_size=rows * cols, max_size=rows * cols,
+        ).map(lambda v: np.asarray(v, np.float32).reshape(rows, cols))))
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays, st.sampled_from([4, 8, 16]))
+def test_roundtrip_error_bounded(x, bits):
+    codes, scale = quantize(jnp.asarray(x), bits)
+    back = np.asarray(dequantize(codes, scale))
+    # absolute error per row bounded by scale/2 (+eps for f32 rounding)
+    err = np.abs(back - x)
+    bound = np.asarray(scale) * 0.5 + 1e-5 * np.abs(x) + 1e-6
+    assert np.all(err <= bound + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays)
+def test_codes_range_int8(x):
+    codes, _ = quantize(jnp.asarray(x), 8)
+    c = np.asarray(codes, np.int32)
+    assert c.min() >= -128 and c.max() <= 127
+    assert codes.dtype == jnp.int8
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays)
+def test_scale_invariance(x):
+    """quantize(a*x) has codes equal to quantize(x) for power-of-two a
+    (symmetric absmax; rows below the 1e-8 scale floor are excluded)."""
+    from hypothesis import assume
+    assume(np.all(np.max(np.abs(x), axis=-1) > 1e-3))
+    c1, s1 = quantize(jnp.asarray(x), 8)
+    c2, s2 = quantize(jnp.asarray(x * 4.0), 8)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1) * 4.0, rtol=1e-5)
+
+
+def test_ste_gradient_is_identity():
+    x = jax.random.normal(jax.random.key(0), (8, 16))
+    g = jax.grad(lambda a: jnp.sum(fake_quant(a, 8) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(x))
+
+
+def test_wire_bytes_accounting():
+    # codes (int8) + f32 scale per row
+    assert wire_bytes((4, 16, 32), 8) == 4 * 16 * 32 + 4 * 16 * 4
+    assert wire_bytes((2, 8), 4) == 2 * 8 // 2 + 2 * 4
+
+
+def test_fake_quant_equals_quant_dequant():
+    x = jax.random.normal(jax.random.key(1), (16, 32))
+    a = fake_quant(x, 8)
+    c, s = quantize(x, 8)
+    b = dequantize(c, s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

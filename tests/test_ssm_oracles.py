@@ -1,0 +1,96 @@
+"""Chunked scan implementations vs naive sequential oracles: the Mamba2 SSD
+chunked form and the chunkwise mLSTM must match step-by-step recurrences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+
+
+def _mamba_cfg(chunk):
+    cfg = get_config("zamba2-7b").reduced()
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm,
+                                                            chunk_size=chunk))
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mamba_chunked_equals_sequential(chunk):
+    """Full-seq SSD output == running decode steps one token at a time."""
+    cfg = _mamba_cfg(chunk)
+    B, S = 2, 16
+    params, _ = ssm_lib.init_mamba(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+
+    full, state_full = ssm_lib.mamba_fullseq(params, x, cfg=cfg,
+                                             return_state=True)
+    state = ssm_lib.init_ssm_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = ssm_lib.mamba_decode(params, x[:, t:t+1], state, cfg=cfg)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state_full["ssm"]),
+                               np.asarray(state["ssm"]), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8])
+def test_mlstm_chunked_equals_sequential(chunk):
+    cfg = get_config("xlstm-125m").reduced()
+    cfg = dataclasses.replace(cfg, xlstm=dataclasses.replace(cfg.xlstm,
+                                                             chunk_size=chunk))
+    B, S = 2, 16
+    params, _ = xlstm_lib.init_mlstm(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+
+    full, state_full = xlstm_lib.mlstm_fullseq(params, x, cfg=cfg,
+                                               return_state=True)
+    state = xlstm_lib.init_mlstm_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = xlstm_lib.mlstm_decode(params, x[:, t:t+1], state, cfg=cfg)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(state_full["C"]),
+                               np.asarray(state["C"]), rtol=3e-4, atol=3e-4)
+
+
+def test_slstm_fullseq_equals_decode_steps():
+    cfg = get_config("xlstm-125m").reduced()
+    B, S = 2, 12
+    params, _ = xlstm_lib.init_slstm(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+    full, state_full = xlstm_lib.slstm_fullseq(params, x, cfg=cfg,
+                                               return_state=True)
+    state = xlstm_lib.init_slstm_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = xlstm_lib.slstm_decode(params, x[:, t:t+1], state, cfg=cfg)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(state_full["c"]),
+                               np.asarray(state["c"]), rtol=2e-5, atol=2e-5)
+
+
+def test_mamba_chunk_size_invariance():
+    """Different chunk sizes give the same function (SSD exactness)."""
+    B, S = 1, 16
+    outs = []
+    for chunk in (4, 8, 16):
+        cfg = _mamba_cfg(chunk)
+        params, _ = ssm_lib.init_mamba(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+        o, _ = ssm_lib.mamba_fullseq(params, x, cfg=cfg)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-4)
