@@ -227,8 +227,74 @@ def bench_wirebits():
               f"wire_bytes_per_batch={wb}")
 
 
+def bench_runtime():
+    """Split-serving runtime: cloud-only (raw upload) vs the butterfly split
+    under identical Poisson traffic, plus the adaptive controller's split
+    trajectory under a cloud-load ramp.  Emits one JSON document
+    (runtime/json row) with the full comparison."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.profiler import JETSON_TX2
+    from repro.runtime.simulator import SimConfig, Simulation, ramp_load
+
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), num_layers=4)
+    base = SimConfig(cfg=cfg, network="3g", num_devices=4, num_requests=32,
+                     arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
+                     d_r=16, numerics=False, seed=0)
+    result = {"workload": {"arch": cfg.name, "layers": cfg.num_layers,
+                           "devices": 4, "requests": 32, "prompt_len": 32,
+                           "d_r": 16}, "networks": {}}
+    t0 = time.perf_counter()
+    for net in ("3g", "4g", "wifi"):
+        row = {}
+        for label, mode, wm in (("cloud_only", "cloud", "int8"),
+                                ("split_raw", "split", "raw"),
+                                ("split_reduced", "split", "reduced"),
+                                ("split_int8", "split", "int8")):
+            sc = dataclasses.replace(base, network=net, mode=mode,
+                                     wire_mode=wm)
+            s = Simulation(sc).run().summary()
+            row[label] = {"latency_p50_ms": round(s["latency_p50_ms"], 3),
+                          "latency_p99_ms": round(s["latency_p99_ms"], 3),
+                          "mean_wire_kb": round(s["mean_wire_kb"], 3),
+                          "mean_mobile_energy_mj":
+                              round(s["mean_mobile_energy_mj"], 3)}
+        row["split_speedup_vs_cloud"] = round(
+            row["cloud_only"]["latency_p50_ms"] /
+            row["split_int8"]["latency_p50_ms"], 2)
+        result["networks"][net] = row
+        print(f"runtime/{net},0,split_p50="
+              f"{row['split_int8']['latency_p50_ms']:.2f}ms "
+              f"cloud_p50={row['cloud_only']['latency_p50_ms']:.2f}ms "
+              f"speedup={row['split_speedup_vs_cloud']:.1f}x")
+    # adaptive split under a load ramp: cloud starts 10x the edge, external
+    # tenants ramp to 97% — the controller must push the split deeper as the
+    # derated cloud drops below edge speed (load > 0.9)
+    sc = dataclasses.replace(
+        base, mode="split", wire_mode="int8", num_requests=64,
+        arrival_rate=40.0, adapt=True, control_interval_s=0.02,
+        cloud=JETSON_TX2.scaled(10, "cloud_slice"),
+        background_load=ramp_load(0.0, 0.25, 0.0, 0.97))
+    tel = Simulation(sc).run()
+    traj = [{"t": round(d["t"], 3), "cloud_load": round(d["cloud_load"], 3),
+             "split": d["split"]} for d in tel.split_trajectory()]
+    result["adaptive"] = {
+        "cloud_over_edge": 10.0,
+        "trajectory": traj,
+        "split_at_low_load": traj[0]["split"],
+        "split_at_high_load": traj[-1]["split"],
+        "moved_deeper_past_0.9": traj[-1]["split"] > traj[0]["split"],
+    }
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"runtime/adaptive,{us/13:.0f},split "
+          f"{traj[0]['split']}->{traj[-1]['split']} as load crosses 0.9")
+    print(f"runtime/json,0,{json.dumps(result, sort_keys=True)}")
+
+
 BENCHES = {
     "fig7": bench_fig7,
+    "runtime": bench_runtime,
     "wirebits": bench_wirebits,
     "table4": bench_table4,
     "table5": bench_table5,

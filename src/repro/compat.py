@@ -1,0 +1,28 @@
+"""Version-compatibility shims for the jax API surface we depend on.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (and its
+``check_rep`` flag was renamed ``check_vma``) after 0.4.x; this repo runs on
+both sides of that line.  Callers use :func:`shard_map` below with the *new*
+spelling and the shim translates for old runtimes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None) -> Any:
+    """``jax.shard_map`` with the post-0.4 keyword surface on any jax.
+
+    ``check_vma=None`` means "library default" on either version.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

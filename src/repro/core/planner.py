@@ -171,3 +171,77 @@ def plan_transformer_split(cfg, seq: int, batch: int, *,
     key = "latency_s" if objective == "latency" else "energy_mj"
     best = min(rows, key=lambda r: r[key])
     return best, rows
+
+
+# ---------------------------------------------------------------------------
+# online selection (paper Sec. III-C): re-run the selection phase at runtime
+# against *observed* conditions — the split-serving runtime's control law
+# ---------------------------------------------------------------------------
+
+
+def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
+                    batch: int = 1) -> float:
+    """Uplink payload per request for each wire ablation mode.
+
+    "raw"     the boundary activation in model dtype (prior-work CI offload)
+    "reduced" butterfly reduction, no wire quantization
+    "int8"    the paper: int8 codes + per-row f32 scales
+    """
+    from repro.core.quantization import wire_bytes
+
+    act_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    if wire_mode == "raw":
+        return float(batch * seq * cfg.d_model * act_bytes)
+    if wire_mode == "reduced":
+        return float(batch * seq * d_r * act_bytes)
+    if wire_mode == "int8":
+        return float(wire_bytes((batch, seq, d_r), 8))
+    raise ValueError(f"unknown wire_mode {wire_mode!r}")
+
+
+def select_split_online(cfg, seq: int, d_r: int, *,
+                        candidate_splits: Sequence[int],
+                        edge: HardwareProfile, cloud: HardwareProfile,
+                        link_bytes_per_s: float, cloud_load: float = 0.0,
+                        edge_load: float = 0.0, wire_mode: str = "int8",
+                        link_energy_mj_per_byte: float = 0.0,
+                        handoff_bytes_per_layer: float = 0.0,
+                        objective: str = "latency"):
+    """One online iteration of Algorithm 1's selection phase.
+
+    Unlike :func:`plan_transformer_split` this takes the *measured* state the
+    runtime's controller observes — effective uplink throughput (nominal
+    bandwidth derated by contention) and current server load — and scores
+    every hosted partition point against it.  ``handoff_bytes_per_layer``
+    charges split-proportional extra wire (the runtime's stage-0 KV-cache
+    handoff for multi-token requests).  Returns ``(best_row, rows)`` with
+    the same row schema as the offline planner."""
+    from repro.core import costs
+
+    assert objective in ("latency", "energy")
+    n = cfg.num_layers
+    base_wire = wire_mode_bytes(cfg, seq, d_r, wire_mode)
+    rows = []
+    for j in candidate_splits:
+        assert 0 < j < n, f"split {j} out of range for {n} layers"
+        ef = costs.stack_flops(cfg, seq, 0, j)
+        ef += 2 * seq * cfg.d_model * d_r               # reduction unit
+        cf = costs.stack_flops(cfg, seq, j, n)
+        cf += 2 * seq * d_r * cfg.d_model               # restoration
+        cf += costs.embed_flops(cfg, seq)
+        eb = ef / max(cfg.d_model, 1)
+        cb = cf / max(cfg.d_model, 1)
+        t_edge = edge.latency_s(ef, eb) / max(1e-9, 1 - edge_load)
+        t_cloud = cloud.latency_s(cf, cb) / max(1e-9, 1 - cloud_load)
+        wire = base_wire + j * handoff_bytes_per_layer
+        t_up = wire / max(link_bytes_per_s, 1e-9)
+        rows.append({
+            "split": j, "d_r": d_r, "edge_s": t_edge, "uplink_s": t_up,
+            "cloud_s": t_cloud, "latency_s": t_edge + t_up + t_cloud,
+            "wire_bytes": wire,
+            "energy_mj": t_edge * edge.compute_power_w * 1e3 +
+                         wire * link_energy_mj_per_byte,
+        })
+    key = "latency_s" if objective == "latency" else "energy_mj"
+    best = min(rows, key=lambda r: r[key])
+    return best, rows

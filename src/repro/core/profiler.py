@@ -25,6 +25,13 @@ class HardwareProfile:
     def latency_s(self, flops: float, nbytes: float) -> float:
         return max(flops / self.flops, nbytes / self.mem_bw)
 
+    def scaled(self, factor: float, name: Optional[str] = None) -> "HardwareProfile":
+        """A platform ``factor``x this one (compute and bandwidth alike) —
+        e.g. the cloud slice a single request sees on a shared server."""
+        return HardwareProfile(name or f"{self.name}_x{factor:g}",
+                               self.flops * factor, self.mem_bw * factor,
+                               self.compute_power_w)
+
 
 # paper platforms (Tables I/II): TX2 ~1.33 TFLOP/s FP16, 59.7 GB/s;
 # GTX 1080 Ti ~ 30x the TX2 per the paper's own characterization.

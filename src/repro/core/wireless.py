@@ -54,3 +54,18 @@ class Interconnect:
 # pods (DCN-class in real deployments; we use the assignment's 50 GB/s/link).
 INTER_POD = Interconnect("inter_pod", 50e9)
 INTRA_POD = Interconnect("intra_pod_ici", 50e9 * 4)   # 4 links per chip
+
+
+def get_link(name: str):
+    """Uplink model by name — wireless (paper Table III) or interconnect.
+
+    Anything with ``uplink_seconds``/``uplink_energy_mj`` works as a link
+    model for the split-serving runtime (runtime/wire.py)."""
+    if name in NETWORKS:
+        return NETWORKS[name]
+    if name == INTER_POD.name:
+        return INTER_POD
+    if name == INTRA_POD.name:
+        return INTRA_POD
+    known = sorted(NETWORKS) + [INTER_POD.name, INTRA_POD.name]
+    raise KeyError(f"unknown link {name!r}; known: {known}")

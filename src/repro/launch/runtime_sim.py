@@ -1,0 +1,133 @@
+"""Split-serving runtime simulator CLI.
+
+Streams Poisson requests from a fleet of simulated edge devices through the
+butterfly split (edge half -> contended wireless uplink -> cloud
+continuous-batching server) on a deterministic virtual clock, and prints the
+per-request latency breakdown plus p50/p95/p99 aggregates.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.runtime_sim --network 3g --devices 4 --requests 16
+  PYTHONPATH=src python -m repro.launch.runtime_sim --mode cloud --network 3g
+  PYTHONPATH=src python -m repro.launch.runtime_sim --wire-mode raw --no-numerics
+  PYTHONPATH=src python -m repro.launch.runtime_sim --adapt --load-ramp 0:0,0.3:0.97 \\
+      --requests 64 --rate 40 --max-new-tokens 1 --no-numerics
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+
+def parse_ramp(spec: str):
+    """"t0:l0,t1:l1" -> piecewise-linear background-load schedule."""
+    pts = []
+    try:
+        for part in spec.split(","):
+            t, l = part.split(":")
+            pts.append((float(t), float(l)))
+    except ValueError:
+        raise SystemExit(f"--load-ramp: expected 't0:l0,t1:l1,...', "
+                         f"got {spec!r}")
+    pts.sort()
+
+    def f(t: float) -> float:
+        if t <= pts[0][0]:
+            return pts[0][1]
+        for (t0, l0), (t1, l1) in zip(pts, pts[1:]):
+            if t <= t1:
+                return l0 + (l1 - l0) * (t - t0) / max(t1 - t0, 1e-12)
+        return pts[-1][1]
+    return f
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="override layer count of the reduced arch "
+                         "(>=2; more layers = more candidate splits)")
+    ap.add_argument("--mode", choices=("split", "cloud", "edge"),
+                    default="split")
+    ap.add_argument("--wire-mode", choices=("raw", "reduced", "int8"),
+                    default="int8")
+    ap.add_argument("--network", default="3g",
+                    choices=("3g", "4g", "wifi", "inter_pod"))
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate per device (req/s)")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=4)
+    ap.add_argument("--d-r", type=int, default=16)
+    ap.add_argument("--split", type=int, default=1,
+                    help="initial partition point (layers on the edge)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="enable the adaptive split controller (Sec. III-C)")
+    ap.add_argument("--control-interval", type=float, default=0.05)
+    ap.add_argument("--load-ramp", default=None,
+                    help='background cloud load "t0:l0,t1:l1,..."')
+    ap.add_argument("--cloud-x", type=float, default=None,
+                    help="cloud speed as a multiple of the edge platform "
+                         "(default: paper's TX2 -> 1080Ti pairing)")
+    ap.add_argument("--max-concurrent", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-numerics", action="store_true",
+                    help="timing-only (skip the real jax computation)")
+    ap.add_argument("--json", default=None, help="write full trace JSON here")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core.profiler import GTX_1080TI, JETSON_TX2
+    from repro.runtime.simulator import SimConfig, Simulation
+
+    cfg = get_config(args.arch).reduced()
+    if args.layers and args.layers != cfg.num_layers:
+        cfg = dataclasses.replace(cfg, num_layers=max(2, args.layers))
+    edge = JETSON_TX2
+    cloud = edge.scaled(args.cloud_x, "cloud_slice") if args.cloud_x \
+        else GTX_1080TI
+    sim_cfg = SimConfig(
+        cfg=cfg, mode=args.mode, wire_mode=args.wire_mode,
+        network=args.network, num_devices=args.devices,
+        num_requests=args.requests, arrival_rate=args.rate,
+        prompt_len=args.seq, max_new_tokens=args.max_new_tokens,
+        d_r=args.d_r, initial_split=args.split,
+        edge=edge, cloud=cloud,
+        background_load=parse_ramp(args.load_ramp) if args.load_ramp else None,
+        adapt=args.adapt, control_interval_s=args.control_interval,
+        max_concurrent=args.max_concurrent, seed=args.seed,
+        numerics=not args.no_numerics)
+
+    sim = Simulation(sim_cfg)
+    tel = sim.run()
+
+    print(f"# {args.mode} serving, wire={args.wire_mode}, "
+          f"network={args.network}, {args.devices} devices, "
+          f"{args.requests} requests, arch={cfg.name} "
+          f"({cfg.num_layers} layers, d_r={args.d_r})")
+    print(tel.table())
+    s = tel.summary()
+    print(f"\nlatency  p50 {s['latency_p50_ms']:9.2f} ms   "
+          f"p95 {s['latency_p95_ms']:9.2f} ms   "
+          f"p99 {s['latency_p99_ms']:9.2f} ms")
+    print(f"ttft     p50 {s['ttft_p50_ms']:9.2f} ms   "
+          f"mean wire {s['mean_wire_kb']:8.2f} kB   "
+          f"mean mobile energy {s['mean_mobile_energy_mj']:8.1f} mJ")
+    print(f"uplink   busy {sim.uplink.stats.busy_s*1e3:.1f} ms, "
+          f"contention wait {sim.uplink.stats.wait_s*1e3:.1f} ms over "
+          f"{sim.uplink.stats.n_transfers} transfers")
+    if tel.decisions:
+        print("\ncontroller decisions (t, cloud_load, split):")
+        for d in tel.decisions:
+            mark = " <-- moved" if d.new_split != d.old_split else ""
+            print(f"  {d.t:7.3f}s  load={d.cloud_load:5.1%}  "
+                  f"split={d.new_split}{mark}")
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(tel.to_json())
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

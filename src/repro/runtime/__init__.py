@@ -1,0 +1,26 @@
+"""Split-serving runtime: an event-driven edge/cloud request simulator.
+
+The paper's headline numbers come from *deploying* the butterfly split under
+request traffic and adapting the partition point to server load (Sec. III-C).
+This package provides the missing request-stream layer on top of the repo's
+static pieces:
+
+  clock.py       deterministic discrete-event loop (reproducible traces)
+  wire.py        contended uplink transport over core/wireless link models
+  telemetry.py   per-request latency/energy breakdown + p50/p95/p99
+  split_exec.py  real jax numerics for the edge/cloud halves + cost model
+  actors.py      edge-device fleet and the cloud continuous-batching server
+  controller.py  adaptive split control (online selection phase)
+  simulator.py   ties the above into a runnable simulation
+
+Entry points: ``repro.launch.runtime_sim`` (CLI) and
+``benchmarks.run runtime`` (JSON comparison vs cloud-only offload).
+"""
+from repro.runtime.clock import EventLoop
+from repro.runtime.controller import AdaptiveSplitController
+from repro.runtime.simulator import SimConfig, Simulation
+from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.wire import Uplink
+
+__all__ = ["EventLoop", "AdaptiveSplitController", "SimConfig", "Simulation",
+           "RequestTrace", "Telemetry", "Uplink"]

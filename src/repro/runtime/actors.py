@@ -1,0 +1,289 @@
+"""Edge-device fleet and cloud continuous-batching server.
+
+EdgeDevice is a serial processor (one prefill at a time, like a phone's NPU):
+requests queue at the device, run the edge half (layers [0, split) + the
+butterfly reduce/quantize), then contend for the shared uplink.
+
+CloudServer is a serial accelerator running a continuous-batching loop over
+the hosted partitioned models (one ServingEngine per split): it alternates
+admitting one pending prefill (restore + layers [split, N) + LM head) and
+running one batched decode step over all active slots — exactly the
+ServingEngine's "prefill one at a time, decode batched" discipline, but on
+the virtual clock, with service times derated by ``1/(1 - load)`` (the
+paper's K_cloud congestion knob).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.clock import EventLoop
+from repro.runtime.split_exec import CostModel, SplitModelBank
+from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.wire import Uplink
+
+
+@dataclass
+class SimRequest:
+    trace: RequestTrace
+    tokens: Optional[np.ndarray] = None       # prompt (numerics mode)
+    max_new_tokens: int = 1
+    payload: Optional[tuple] = None           # (codes, scales, stage0_cache)
+    engine_req: object = None                 # serving.engine.Request
+    slot: int = -1                            # cloud slot (virtual accounting)
+
+    @property
+    def uid(self) -> int:
+        return self.trace.uid
+
+
+class EdgeDevice:
+    """Serial edge processor feeding a shared uplink."""
+
+    def __init__(self, dev_id: int, *, loop: EventLoop, cost: CostModel,
+                 uplink: Uplink, server: "CloudServer",
+                 bank: Optional[SplitModelBank], mode: str, wire_mode: str,
+                 d_r: int, telemetry: Telemetry, numerics_split: int = 1):
+        self.dev_id = dev_id
+        self.numerics_split = numerics_split
+        self.loop = loop
+        self.cost = cost
+        self.uplink = uplink
+        self.server = server
+        self.bank = bank
+        self.mode = mode
+        self.wire_mode = wire_mode
+        self.d_r = d_r
+        self.telemetry = telemetry
+        self.free_at = 0.0
+        self._local_engine = None
+
+    def on_arrival(self, req: SimRequest) -> None:
+        t = req.trace
+        t.t_arrival = self.loop.now
+        start = max(self.loop.now, self.free_at)
+        S = t.prompt_len
+        if self.mode == "split":
+            dur = self.cost.edge_prefill_s(t.split, S, self.d_r)
+        elif self.mode == "edge":
+            dur = self.cost.full_prefill_s(S, where="edge")
+            dur += sum(self.cost.decode_step_s(1, where="edge")
+                       for _ in range(max(req.max_new_tokens - 1, 0)))
+        else:                                   # cloud-only: capture + ship
+            dur = 0.0
+        t.t_edge_start = start
+        t.t_edge_done = start + dur
+        self.free_at = t.t_edge_done
+        self.loop.schedule_at(t.t_edge_done, lambda: self._edge_done(req))
+
+    def _edge_done(self, req: SimRequest) -> None:
+        t = req.trace
+        t.mobile_energy_mj += self.cost.edge_energy_mj(t.edge_compute_s)
+        if self.mode == "split" and self.bank is not None:
+            runner = self.bank.runner(t.split)
+            payload, scales, cache0 = runner.edge_half(runner.params,
+                                                       req.tokens[None])
+            req.payload = (payload, scales, cache0)
+        if self.mode == "edge":
+            self._finish_local(req)
+            return
+        nbytes = self.cost.payload_bytes(self.mode, self.wire_mode,
+                                         t.prompt_len, self.d_r, t.split,
+                                         req.max_new_tokens)
+        t.wire_bytes = nbytes
+        start, done = self.uplink.transfer(nbytes, self.loop.now)
+        t.t_uplink_start, t.t_uplink_done = start, done
+        t.mobile_energy_mj += self.uplink.transfer_energy_mj(nbytes)
+        self.loop.schedule_at(done, lambda: self.server.on_payload(req))
+
+    def _finish_local(self, req: SimRequest) -> None:
+        """Mobile-only baseline: everything already ran on the device."""
+        t = req.trace
+        t.t_uplink_start = t.t_uplink_done = t.t_cloud_start = t.t_edge_done
+        t.t_first_token = t.t_done = t.t_edge_done
+        if self.bank is not None:
+            # mobile-only runs the same hosted model (split is a no-op for
+            # numerics when both halves share a device); one engine per
+            # device, reused across its serial requests
+            if self._local_engine is None:
+                runner = self.bank.runner(self.numerics_split)
+                self._local_engine = runner.make_engine(
+                    max_batch=1, max_len=self.server.max_len)
+            eng = self._local_engine
+            req.engine_req = eng.submit(req.tokens,
+                                        max_new_tokens=req.max_new_tokens)
+            eng.run()
+            t.new_tokens = len(req.engine_req.generated)
+        else:
+            t.new_tokens = req.max_new_tokens
+        self.telemetry.record(t)
+        self.server.sim_request_done(req)
+
+
+class CloudServer:
+    """Serial accelerator + slot pool running continuous batching."""
+
+    def __init__(self, *, loop: EventLoop, cost: CostModel,
+                 bank: Optional[SplitModelBank], mode: str, d_r: int,
+                 telemetry: Telemetry, max_concurrent: int = 8,
+                 background_load: Optional[Callable[[float], float]] = None,
+                 engine_seed: int = 0, max_len: int = 256,
+                 on_done: Optional[Callable[[SimRequest], None]] = None,
+                 numerics_split: int = 1):
+        self.numerics_split = numerics_split
+        self.loop = loop
+        self.cost = cost
+        self.bank = bank
+        self.mode = mode
+        self.d_r = d_r
+        self.telemetry = telemetry
+        self.max_concurrent = max_concurrent
+        self.background_load = background_load or (lambda t: 0.0)
+        self.max_len = max_len
+        self.engine_seed = engine_seed
+        self.on_done = on_done
+        self.pending: deque[SimRequest] = deque()
+        self.slots: List[Optional[SimRequest]] = [None] * max_concurrent
+        self.slot_history: List[tuple] = []       # (uid, slot) admissions
+        self._engines: Dict[int, object] = {}     # split -> ServingEngine
+        self._virtual_left: Dict[int, int] = {}   # uid -> decode steps left
+        self._busy = False
+        self.peak_active = 0
+
+    # -- load signal --------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return sum(1 for r in self.slots if r is not None)
+
+    def current_load(self, now: float) -> float:
+        """Combined congestion the mobile observes when it pings the server:
+        external tenants (background) plus this fleet's own occupancy."""
+        bg = min(max(self.background_load(now), 0.0), 0.99)
+        occ = self.num_active / self.max_concurrent
+        return min(1.0 - (1.0 - bg) * (1.0 - occ), 0.99)
+
+    # -- request flow -------------------------------------------------------
+    def on_payload(self, req: SimRequest) -> None:
+        self.pending.append(req)
+        self._kick()
+
+    def _kick(self) -> None:
+        if not self._busy:
+            self._busy = True
+            self.loop.schedule(0.0, self._service)
+
+    def _engine(self, split: int):
+        if self.bank is None:
+            return None
+        if self.mode != "split":
+            split = self.numerics_split   # cloud-only runs one hosted model
+        if split not in self._engines:
+            self._engines[split] = self.bank.runner(split).make_engine(
+                max_batch=self.max_concurrent, max_len=self.max_len,
+                seed=self.engine_seed)
+        return self._engines[split]
+
+    def _free_slot(self) -> int:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return -1
+
+    def _service(self) -> None:
+        now = self.loop.now
+        slot = self._free_slot()
+        if self.pending and slot >= 0:
+            req = self.pending.popleft()
+            self._admit(req, slot, now)
+            return
+        if self.num_active > 0:
+            self._decode_step(now)
+            return
+        self._busy = False
+
+    def _admit(self, req: SimRequest, slot: int, now: float) -> None:
+        t = req.trace
+        t.t_cloud_start = now
+        load = min(max(self.background_load(now), 0.0), 0.99)
+        S = t.prompt_len
+        if self.mode == "split":
+            dur = self.cost.cloud_prefill_s(t.split, S, self.d_r, load)
+        else:
+            dur = self.cost.full_prefill_s(S, where="cloud", load=load)
+        req.slot = slot
+        self.slots[slot] = req
+        self.slot_history.append((t.uid, slot))
+        self.peak_active = max(self.peak_active, self.num_active)
+        self.loop.schedule(dur, lambda: self._prefill_done(req))
+
+    def _prefill_done(self, req: SimRequest) -> None:
+        t = req.trace
+        t.t_first_token = self.loop.now
+        eng = self._engine(t.split)
+        if eng is not None:
+            if self.mode == "split":
+                runner = self.bank.runner(t.split)
+                payload, scales, cache0 = req.payload
+                logits, cache1 = runner.cloud_half(runner.params, payload,
+                                                   scales)
+                req.engine_req = eng.submit_prefilled(
+                    t.prompt_len, [cache0, cache1], logits[0],
+                    max_new_tokens=req.max_new_tokens)
+            else:
+                req.engine_req = eng.submit(
+                    req.tokens, max_new_tokens=req.max_new_tokens)
+            req.payload = None
+            if req.engine_req.done:
+                self._complete(req)
+        else:
+            self._virtual_left[t.uid] = req.max_new_tokens - 1
+            if self._virtual_left[t.uid] <= 0:
+                self._complete(req)
+        self.loop.schedule(0.0, self._service)
+
+    def _decode_step(self, now: float) -> None:
+        batch = self.num_active
+        load = min(max(self.background_load(now), 0.0), 0.99)
+        dur = self.cost.decode_step_s(batch, where="cloud", load=load)
+        self.loop.schedule(dur, self._decode_done)
+
+    def _decode_done(self) -> None:
+        if self.bank is not None:
+            stepped = set()
+            for req in list(self.slots):
+                if req is None:
+                    continue
+                eng = self._engine(req.trace.split)
+                if id(eng) not in stepped:
+                    eng.step()
+                    stepped.add(id(eng))
+            for req in list(self.slots):
+                if req is not None and req.engine_req.done:
+                    self._complete(req)
+        else:
+            for req in list(self.slots):
+                if req is None:
+                    continue
+                self._virtual_left[req.uid] -= 1
+                if self._virtual_left[req.uid] <= 0:
+                    self._complete(req)
+        self.loop.schedule(0.0, self._service)
+
+    def _complete(self, req: SimRequest) -> None:
+        t = req.trace
+        t.t_done = self.loop.now
+        if req.engine_req is not None:
+            t.new_tokens = len(req.engine_req.generated)
+        else:
+            t.new_tokens = req.max_new_tokens
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+        self.telemetry.record(t)
+        self.sim_request_done(req)
+
+    def sim_request_done(self, req: SimRequest) -> None:
+        if self.on_done is not None:
+            self.on_done(req)

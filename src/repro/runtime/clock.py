@@ -1,0 +1,62 @@
+"""Deterministic discrete-event simulation core.
+
+A single virtual clock advances only when events fire; equal-time events run
+in submission order (FIFO tie-break), so a simulation with a fixed seed
+produces bit-identical traces on every host — the property the runtime tests
+and the benchmark's cloud-only/split comparisons rely on.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class EventLoop:
+    """Min-heap of ``(time, seq, fn)``; ``seq`` makes ordering total."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._processed = 0
+
+    def schedule_at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self.now:
+            raise ValueError(f"cannot schedule at {t} < now {self.now}")
+        heapq.heappush(self._heap, (float(t), next(self._seq), fn))
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        self.schedule_at(self.now + delay, fn)
+
+    def empty(self) -> bool:
+        return not self._heap
+
+    @property
+    def events_processed(self) -> int:
+        return self._processed
+
+    def step(self) -> bool:
+        """Fire the next event; returns False when the queue is empty."""
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self.now = t
+        self._processed += 1
+        fn()
+        return True
+
+    def run(self, until: Optional[float] = None,
+            max_events: int = 10_000_000) -> float:
+        """Drain the queue (or stop at virtual time ``until``); returns the
+        final clock value."""
+        while self._heap and self._processed < max_events:
+            if until is not None and self._heap[0][0] > until:
+                self.now = until
+                return self.now
+            self.step()
+        if self._heap:
+            raise RuntimeError(f"event budget exhausted ({max_events})")
+        return self.now

@@ -1,0 +1,84 @@
+"""Adaptive split control — the paper's Sec. III-C load-adaptation protocol,
+closed-loop.
+
+Periodically (the mobile "pings the server"), the controller samples the
+cloud's congestion level and the uplink's *observed* goodput (nominal
+bandwidth derated by contention) and re-runs Algorithm 1's selection phase
+(core/planner.select_split_online) over the hosted partition points.  New
+requests are then routed to the winning split: congestion pushes the split
+deeper — more layers stay on the edge — while still shipping less than the
+raw input.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from repro.core.planner import select_split_online
+from repro.core.profiler import HardwareProfile
+from repro.runtime.clock import EventLoop
+from repro.runtime.telemetry import ControlDecision, Telemetry
+from repro.runtime.wire import Uplink
+
+
+class AdaptiveSplitController:
+    def __init__(self, *, loop: EventLoop, uplink: Uplink,
+                 cloud_load: Callable[[float], float],
+                 cfg, d_r: int, seq: int,
+                 candidate_splits: Sequence[int],
+                 edge: HardwareProfile, cloud: HardwareProfile,
+                 wire_mode: str, telemetry: Telemetry,
+                 set_split: Callable[[int], None],
+                 get_split: Callable[[], int],
+                 interval_s: float = 0.05,
+                 handoff_bytes_per_layer: float = 0.0,
+                 objective: str = "latency"):
+        self.handoff_bytes_per_layer = handoff_bytes_per_layer
+        self.loop = loop
+        self.uplink = uplink
+        self.cloud_load = cloud_load
+        self.cfg = cfg
+        self.d_r = d_r
+        self.seq = seq
+        self.candidates = list(candidate_splits)
+        self.edge = edge
+        self.cloud = cloud
+        self.wire_mode = wire_mode
+        self.telemetry = telemetry
+        self.set_split = set_split
+        self.get_split = get_split
+        self.interval_s = interval_s
+        self.objective = objective
+        self.running = False
+
+    def start(self) -> None:
+        self.running = True
+        self.loop.schedule(0.0, self._tick)
+
+    def stop(self) -> None:
+        self.running = False
+
+    def decide(self, now: float) -> int:
+        load = self.cloud_load(now)
+        link_bps = self.uplink.observed_bytes_per_s(now)
+        best, _ = select_split_online(
+            self.cfg, self.seq, self.d_r,
+            candidate_splits=self.candidates,
+            edge=self.edge, cloud=self.cloud,
+            link_bytes_per_s=link_bps, cloud_load=load,
+            wire_mode=self.wire_mode,
+            link_energy_mj_per_byte=self.uplink.transfer_energy_mj(1.0),
+            handoff_bytes_per_layer=self.handoff_bytes_per_layer,
+            objective=self.objective)
+        old = self.get_split()
+        self.telemetry.record_decision(ControlDecision(
+            t=now, cloud_load=load, link_bytes_per_s=link_bps,
+            old_split=old, new_split=best["split"]))
+        if best["split"] != old:
+            self.set_split(best["split"])
+        return best["split"]
+
+    def _tick(self) -> None:
+        if not self.running:
+            return
+        self.decide(self.loop.now)
+        self.loop.schedule(self.interval_s, self._tick)

@@ -1,0 +1,178 @@
+"""The split-serving simulation: fleet + wire + server + controller.
+
+A fleet of edge devices emits Poisson request streams; each request runs the
+edge half of the current partition point, contends for the shared uplink,
+and is served by the cloud's continuous-batching engine.  All timing is
+virtual (deterministic for a fixed seed); numerics are real jax when
+``numerics=True`` and skipped entirely in timing-only mode (used by the
+fast benchmark sweeps and scheduler tests).
+
+Serving modes:
+  "split"  the paper: edge layers + butterfly reduce/quantize, compressed wire
+  "cloud"  cloud-only offload: raw input features cross the wire
+  "edge"   mobile-only: everything on the device, nothing crosses
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.profiler import GTX_1080TI, JETSON_TX2, HardwareProfile
+from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
+from repro.runtime.clock import EventLoop
+from repro.runtime.split_exec import CostModel, SplitModelBank
+from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.wire import Uplink
+
+
+def ramp_load(t0: float, t1: float, l0: float = 0.0,
+              l1: float = 0.95) -> Callable[[float], float]:
+    """Background cloud load ramping linearly from l0@t0 to l1@t1."""
+    def f(t: float) -> float:
+        if t <= t0:
+            return l0
+        if t >= t1:
+            return l1
+        return l0 + (l1 - l0) * (t - t0) / (t1 - t0)
+    return f
+
+
+@dataclass
+class SimConfig:
+    cfg: object                              # ModelConfig (butterfly optional)
+    mode: str = "split"                      # split | cloud | edge
+    wire_mode: str = "int8"                  # raw | reduced | int8
+    network: str = "3g"                      # 3g | 4g | wifi | inter_pod
+    num_devices: int = 4
+    num_requests: int = 16
+    arrival_rate: float = 20.0               # per device, requests/s
+    prompt_len: int = 32
+    max_new_tokens: int = 4
+    d_r: int = 16
+    initial_split: int = 1
+    candidate_splits: Optional[Sequence[int]] = None
+    edge: HardwareProfile = JETSON_TX2
+    cloud: HardwareProfile = GTX_1080TI
+    background_load: Optional[Callable[[float], float]] = None
+    adapt: bool = False
+    control_interval_s: float = 0.05
+    max_concurrent: int = 8
+    seed: int = 0
+    numerics: bool = True
+
+
+class Simulation:
+    def __init__(self, sim_cfg: SimConfig):
+        c = sim_cfg
+        assert c.mode in ("split", "cloud", "edge"), c.mode
+        base = c.cfg
+        if base.butterfly is not None:
+            base = replace(base, butterfly=None)
+        self.sim_cfg = c
+        self.base_cfg = base
+        self.loop = EventLoop()
+        self.telemetry = Telemetry()
+        self.uplink = Uplink.named(c.network)
+        self.current_split = c.initial_split
+        self.candidates = list(c.candidate_splits) if c.candidate_splits \
+            else list(range(1, base.num_layers))
+        assert c.initial_split in self.candidates, \
+            f"initial split {c.initial_split} not in {self.candidates}"
+        self.bank = SplitModelBank(base, c.d_r, wire_mode=c.wire_mode,
+                                   seed=c.seed) if c.numerics else None
+        self.cost = CostModel(base, c.edge, c.cloud)
+        self._remaining = c.num_requests
+        self.server = CloudServer(
+            loop=self.loop, cost=self.cost, bank=self.bank, mode=c.mode,
+            d_r=c.d_r, telemetry=self.telemetry,
+            max_concurrent=c.max_concurrent,
+            background_load=c.background_load,
+            engine_seed=c.seed,
+            max_len=c.prompt_len + c.max_new_tokens + 2,
+            on_done=self._on_done, numerics_split=c.initial_split)
+        self.devices = [
+            EdgeDevice(i, loop=self.loop, cost=self.cost, uplink=self.uplink,
+                       server=self.server, bank=self.bank, mode=c.mode,
+                       wire_mode=c.wire_mode, d_r=c.d_r,
+                       telemetry=self.telemetry,
+                       numerics_split=c.initial_split)
+            for i in range(c.num_devices)]
+        self.controller: Optional[object] = None
+        if c.adapt and c.mode == "split":
+            from repro.runtime.controller import AdaptiveSplitController
+            self.controller = AdaptiveSplitController(
+                loop=self.loop, uplink=self.uplink,
+                cloud_load=self.server.current_load,
+                cfg=base, d_r=c.d_r, seq=c.prompt_len,
+                candidate_splits=self.candidates,
+                edge=c.edge, cloud=c.cloud, wire_mode=c.wire_mode,
+                telemetry=self.telemetry,
+                set_split=self._set_split, get_split=lambda: self.current_split,
+                interval_s=c.control_interval_s,
+                handoff_bytes_per_layer=(
+                    self.cost.stage0_cache_bytes(c.prompt_len, 1)
+                    if c.max_new_tokens > 1 else 0.0))
+
+    # ------------------------------------------------------------------ api
+    def run(self) -> Telemetry:
+        self._schedule_arrivals()
+        if self.controller is not None:
+            self.controller.start()
+        self.loop.run()
+        assert self._remaining == 0, \
+            f"{self._remaining} requests never completed"
+        return self.telemetry
+
+    # ------------------------------------------------------------- internals
+    def _set_split(self, split: int) -> None:
+        self.current_split = split
+
+    def _on_done(self, req: SimRequest) -> None:
+        self._remaining -= 1
+        if self._remaining == 0 and self.controller is not None:
+            self.controller.stop()
+
+    def _schedule_arrivals(self) -> None:
+        c = self.sim_cfg
+        self.requests: List[SimRequest] = []
+        uid = 0
+        per_dev = [c.num_requests // c.num_devices] * c.num_devices
+        for i in range(c.num_requests % c.num_devices):
+            per_dev[i] += 1
+        for dev, n in enumerate(per_dev):
+            rng = np.random.default_rng([c.seed, dev])
+            t = 0.0
+            for _ in range(n):
+                t += rng.exponential(1.0 / c.arrival_rate)
+                tokens = None
+                if c.numerics:
+                    tokens = rng.integers(
+                        0, self.base_cfg.vocab_size, size=(c.prompt_len,),
+                        dtype=np.int64).astype(np.int32)
+                trace = RequestTrace(
+                    uid=uid, device=dev, mode=c.mode, wire_mode=c.wire_mode,
+                    split=0, prompt_len=c.prompt_len)
+                req = SimRequest(trace=trace, tokens=tokens,
+                                 max_new_tokens=c.max_new_tokens)
+                self.requests.append(req)
+                uid += 1
+                self.loop.schedule_at(t, self._make_arrival(dev, req))
+
+    def _make_arrival(self, dev: int, req: SimRequest) -> Callable[[], None]:
+        def fire() -> None:
+            # the split is pinned when the mobile starts the request — the
+            # controller's latest decision governs new arrivals only
+            if self.sim_cfg.mode == "split":
+                req.trace.split = self.current_split
+            elif self.sim_cfg.mode == "edge":
+                req.trace.split = self.base_cfg.num_layers
+            else:
+                req.trace.split = 0
+            self.devices[dev].on_arrival(req)
+        return fire
+
+
+def run_sim(sim_cfg: SimConfig) -> Telemetry:
+    return Simulation(sim_cfg).run()

@@ -1,0 +1,207 @@
+"""Real numerics + analytic timing for partitioned execution.
+
+Numerics and time are decoupled on purpose: the jax computation produces the
+actual logits/tokens/caches (so split serving is verifiable against the
+single-mesh forward), while durations come from the roofline
+cost model (core/profiler) driven by the deterministic virtual clock — a
+CPU-only container can therefore simulate a Jetson-class edge talking to a
+GPU-class cloud over 3G with reproducible traces.
+
+The cloud hosts one partitioned model per candidate split (the paper's "M
+partitioned models", Sec. III-C); :class:`SplitModelBank` builds them
+lazily.  For multi-token requests the edge hands its stage-0 KV cache to the
+cloud alongside the codes (prefill/decode-disaggregation style cache
+transfer) so decode runs entirely cloud-side; streaming decode over the wire
+is the DESIGN.md extension.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core import costs
+from repro.core.planner import wire_mode_bytes
+from repro.core.profiler import HardwareProfile
+
+
+def act_bytes(cfg) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def input_bytes(cfg, seq: int) -> float:
+    """Cloud-only offload ships the frontend's feature output (the paper
+    ships the raw 224x224x3 image) — one d_model-wide row per position."""
+    return float(seq * cfg.d_model * act_bytes(cfg))
+
+
+# ---------------------------------------------------------------------------
+# analytic timing (virtual-clock durations)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostModel:
+    cfg: object
+    edge: HardwareProfile
+    cloud: HardwareProfile
+
+    def _roofline(self, hw: HardwareProfile, flops: float,
+                  load: float = 0.0) -> float:
+        nbytes = flops / max(self.cfg.d_model, 1)      # planner's bytes proxy
+        return hw.latency_s(flops, nbytes) / max(1e-9, 1.0 - load)
+
+    def edge_prefill_s(self, split: int, seq: int, d_r: int) -> float:
+        f = costs.stack_flops(self.cfg, seq, 0, split)
+        f += 2 * seq * self.cfg.d_model * d_r          # reduction unit
+        return self._roofline(self.edge, f)
+
+    def cloud_prefill_s(self, split: int, seq: int, d_r: int,
+                        load: float = 0.0) -> float:
+        f = costs.stack_flops(self.cfg, seq, split, self.cfg.num_layers)
+        f += 2 * seq * d_r * self.cfg.d_model          # restoration unit
+        f += costs.embed_flops(self.cfg, seq)
+        return self._roofline(self.cloud, f, load)
+
+    def full_prefill_s(self, seq: int, *, where: str,
+                       load: float = 0.0) -> float:
+        f = costs.stack_flops(self.cfg, seq, 0, self.cfg.num_layers)
+        f += costs.embed_flops(self.cfg, seq)
+        hw = self.edge if where == "edge" else self.cloud
+        return self._roofline(hw, f, load)
+
+    def decode_step_s(self, batch: int, *, where: str,
+                      load: float = 0.0) -> float:
+        f = costs.model_flops_decode(self.cfg, batch)
+        hw = self.edge if where == "edge" else self.cloud
+        # decode is weight-bound: every step streams the full parameter set
+        nbytes = costs.param_count(self.cfg) * act_bytes(self.cfg)
+        return hw.latency_s(f, nbytes) / max(1e-9, 1.0 - load)
+
+    def edge_energy_mj(self, seconds: float) -> float:
+        return seconds * self.edge.compute_power_w * 1e3
+
+    def payload_bytes(self, mode: str, wire_mode: str, seq: int,
+                      d_r: int, split: int, new_tokens: int = 1) -> float:
+        """Uplink bytes per request.  Split requests generating more than one
+        token additionally ship the edge stage-0 KV cache (cache handoff —
+        counted honestly; avoiding it is the decode-over-the-wire
+        extension)."""
+        if mode == "cloud":
+            return input_bytes(self.cfg, seq)
+        if mode == "edge":
+            return 0.0
+        b = wire_mode_bytes(self.cfg, seq, d_r, wire_mode)
+        if new_tokens > 1:
+            b += self.stage0_cache_bytes(seq, split)
+        return b
+
+    def stage0_cache_bytes(self, seq: int, split: int) -> float:
+        # KV bytes per edge layer: 2 (K and V) * kv_heads * head_dim
+        cfg = self.cfg
+        per_layer = 2 * seq * cfg.num_kv_heads * cfg.resolved_head_dim * \
+            act_bytes(cfg)
+        return float(per_layer * split)
+
+
+# ---------------------------------------------------------------------------
+# real numerics: the per-split partitioned models
+# ---------------------------------------------------------------------------
+
+
+class SplitRunner:
+    """One partitioned model: jitted edge half, cloud half, full reference."""
+
+    def __init__(self, cfg, *, seed: int = 0, wire_mode: str = "int8"):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.quantization import dequantize, quantize
+        from repro.models import model as M
+        from repro.models import transformer as tfm
+        from repro.models.common import embed, rms_norm, unembed
+        from repro.models.parallel import LOCAL
+
+        assert cfg.butterfly is not None, "SplitRunner needs a butterfly cfg"
+        assert wire_mode in ("raw", "reduced", "int8"), wire_mode
+        self.cfg = cfg
+        self.wire_mode = wire_mode
+        self.built = M.build(cfg)
+        self.params, _ = M.init_model(jax.random.key(seed), self.built)
+        dt = jnp.dtype(cfg.dtype)
+        stages = self.built.stages
+        shared = "shared_attn"
+
+        def edge_half(params, toks):
+            scale = cfg.arch_type == "dense" and cfg.act == "gelu"
+            x = embed(params["embed"], toks, scale=scale)
+            x, cache0, _ = tfm.apply_stage(
+                list(stages[0]), params["stages"][0], x, cfg=cfg, pctx=LOCAL,
+                mode="prefill", stage_cache=None, pos=None,
+                shared_params=params.get(shared))
+            if wire_mode == "raw":
+                return x, jnp.zeros((x.shape[0], x.shape[1], 1), jnp.float32), cache0
+            r = x @ params["butterfly"]["w_reduce"]
+            if wire_mode == "reduced":
+                return r, jnp.zeros((r.shape[0], r.shape[1], 1), jnp.float32), cache0
+            codes, scales = quantize(r, cfg.butterfly.wire_bits)
+            return codes, scales, cache0
+
+        def cloud_half(params, payload, scales):
+            if wire_mode == "raw":
+                x = payload
+            else:
+                r = payload if wire_mode == "reduced" else \
+                    dequantize(payload, scales, dt)
+                x = r @ params["butterfly"]["w_restore"]
+            x, cache1, _ = tfm.apply_stage(
+                list(stages[1]), params["stages"][1], x, cfg=cfg, pctx=LOCAL,
+                mode="prefill", stage_cache=None, pos=None,
+                shared_params=params.get(shared))
+            x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x, cfg.logit_softcap)[:, 0], cache1
+
+        self.edge_half = jax.jit(edge_half)
+        self.cloud_half = jax.jit(cloud_half)
+        self._M = M
+
+    def make_engine(self, *, max_batch: int, max_len: int, seed: int = 0):
+        from repro.serving.engine import ServingEngine
+        return ServingEngine(self.params, self.built, max_batch=max_batch,
+                             max_len=max_len, seed=seed)
+
+    def reference_prefill(self, toks):
+        """Single-mesh forward (what the split path must reproduce)."""
+        import jax.numpy as jnp
+        logits, caches = self._M.forward_prefill(
+            self.params, self.built, {"tokens": jnp.asarray(toks)})
+        return logits, caches
+
+
+class SplitModelBank:
+    """Lazily built {candidate split -> SplitRunner}, shared base config.
+
+    The paper's server hosts M partitioned models and the selection phase
+    picks among them; candidates here are layer boundaries."""
+
+    def __init__(self, base_cfg, d_r: int, *, wire_bits: int = 8,
+                 wire_mode: str = "int8", seed: int = 0):
+        assert base_cfg.num_layers >= 2, "need >=2 layers to split"
+        self.base_cfg = base_cfg
+        self.d_r = d_r
+        self.wire_bits = wire_bits
+        self.wire_mode = wire_mode
+        self.seed = seed
+        self._runners: Dict[int, SplitRunner] = {}
+
+    @property
+    def candidates(self) -> Tuple[int, ...]:
+        return tuple(range(1, self.base_cfg.num_layers))
+
+    def runner(self, split: int) -> SplitRunner:
+        if split not in self._runners:
+            cfg = self.base_cfg.with_butterfly(split, self.d_r,
+                                               self.wire_bits)
+            self._runners[split] = SplitRunner(cfg, seed=self.seed,
+                                               wire_mode=self.wire_mode)
+        return self._runners[split]

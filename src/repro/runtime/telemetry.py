@@ -1,0 +1,172 @@
+"""Per-request traces and fleet-level aggregates for the split runtime.
+
+Every request records absolute virtual timestamps at each hop; the breakdown
+(edge queue / edge compute / uplink / cloud queue / cloud compute) is derived
+so the invariant ``sum(breakdown) == latency`` holds by construction and is
+asserted in tests.  Aggregates report p50/p95/p99 latency, wire bytes, and
+mobile energy — the paper's Table V quantities at request-stream scale.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestTrace:
+    uid: int
+    device: int
+    mode: str                          # split | cloud | edge
+    wire_mode: str                     # raw | reduced | int8 (split mode)
+    split: int                         # partition point used (0 = no split)
+    prompt_len: int
+    new_tokens: int = 0
+    wire_bytes: float = 0.0
+    mobile_energy_mj: float = 0.0
+    # absolute virtual timestamps (seconds)
+    t_arrival: float = 0.0
+    t_edge_start: float = 0.0
+    t_edge_done: float = 0.0
+    t_uplink_start: float = 0.0        # transfer admitted to the link
+    t_uplink_done: float = 0.0
+    t_cloud_start: float = 0.0         # admitted into the batch server
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    # -- derived breakdown --------------------------------------------------
+    @property
+    def edge_queue_s(self) -> float:
+        return self.t_edge_start - self.t_arrival
+
+    @property
+    def edge_compute_s(self) -> float:
+        return self.t_edge_done - self.t_edge_start
+
+    @property
+    def uplink_wait_s(self) -> float:
+        return self.t_uplink_start - self.t_edge_done
+
+    @property
+    def uplink_s(self) -> float:
+        return self.t_uplink_done - self.t_uplink_start
+
+    @property
+    def cloud_queue_s(self) -> float:
+        return self.t_cloud_start - self.t_uplink_done
+
+    @property
+    def cloud_s(self) -> float:
+        return self.t_done - self.t_cloud_start
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.t_arrival
+
+    def breakdown(self) -> Dict[str, float]:
+        return {
+            "edge_queue_s": self.edge_queue_s,
+            "edge_compute_s": self.edge_compute_s,
+            "uplink_wait_s": self.uplink_wait_s,
+            "uplink_s": self.uplink_s,
+            "cloud_queue_s": self.cloud_queue_s,
+            "cloud_s": self.cloud_s,
+        }
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Deterministic linear-interpolation percentile (numpy 'linear')."""
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    frac = rank - lo
+    return xs[lo] * (1 - frac) + xs[hi] * frac
+
+
+@dataclass
+class ControlDecision:
+    t: float
+    cloud_load: float
+    link_bytes_per_s: float
+    old_split: int
+    new_split: int
+
+
+class Telemetry:
+    def __init__(self):
+        self.traces: List[RequestTrace] = []
+        self.decisions: List[ControlDecision] = []
+
+    def record(self, trace: RequestTrace) -> None:
+        self.traces.append(trace)
+
+    def record_decision(self, d: ControlDecision) -> None:
+        self.decisions.append(d)
+
+    # -- aggregates ---------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        lat = [t.latency_s for t in self.traces]
+        ttft = [t.ttft_s for t in self.traces]
+        out: Dict[str, float] = {"n_requests": len(self.traces)}
+        for name, xs in (("latency", lat), ("ttft", ttft)):
+            for p in (50, 95, 99):
+                out[f"{name}_p{p}_ms"] = percentile(xs, p) * 1e3
+            out[f"{name}_mean_ms"] = (sum(xs) / len(xs) * 1e3) if xs else float("nan")
+        if self.traces:
+            for key in ("edge_queue_s", "edge_compute_s", "uplink_wait_s",
+                        "uplink_s", "cloud_queue_s", "cloud_s"):
+                out[f"mean_{key[:-2]}_ms"] = sum(
+                    t.breakdown()[key] for t in self.traces) / len(self.traces) * 1e3
+            out["total_wire_mb"] = sum(t.wire_bytes for t in self.traces) / 1e6
+            out["mean_wire_kb"] = sum(
+                t.wire_bytes for t in self.traces) / len(self.traces) / 1e3
+            out["mean_mobile_energy_mj"] = sum(
+                t.mobile_energy_mj for t in self.traces) / len(self.traces)
+            span = max(t.t_done for t in self.traces) - \
+                min(t.t_arrival for t in self.traces)
+            out["throughput_rps"] = len(self.traces) / span if span > 0 else float("inf")
+        return out
+
+    def split_trajectory(self) -> List[Dict[str, float]]:
+        return [{"t": d.t, "cloud_load": d.cloud_load,
+                 "link_bytes_per_s": d.link_bytes_per_s,
+                 "split": d.new_split} for d in self.decisions]
+
+    # -- rendering ----------------------------------------------------------
+    _COLS = ("uid", "dev", "split", "S", "edgeq_ms", "edge_ms", "upwait_ms",
+             "uplink_ms", "cloudq_ms", "cloud_ms", "total_ms", "wire_kb",
+             "energy_mj")
+
+    def table(self) -> str:
+        """Per-request latency-breakdown table (the CLI's main output)."""
+        rows = [" ".join(f"{c:>9s}" for c in self._COLS)]
+        for t in self.traces:
+            vals = (t.uid, t.device, t.split, t.prompt_len,
+                    t.edge_queue_s * 1e3, t.edge_compute_s * 1e3,
+                    t.uplink_wait_s * 1e3, t.uplink_s * 1e3,
+                    t.cloud_queue_s * 1e3, t.cloud_s * 1e3,
+                    t.latency_s * 1e3, t.wire_bytes / 1e3,
+                    t.mobile_energy_mj)
+            rows.append(" ".join(
+                f"{v:>9d}" if isinstance(v, int) else f"{v:>9.3f}"
+                for v in vals))
+        return "\n".join(rows)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "summary": self.summary(),
+            "decisions": self.split_trajectory(),
+            "traces": [dict(asdict(t), **{k: round(v, 9) for k, v in
+                                          t.breakdown().items()})
+                       for t in self.traces],
+        }, indent=2, sort_keys=True)

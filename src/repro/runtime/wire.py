@@ -1,0 +1,72 @@
+"""The Wire: a contended serial uplink over the core/wireless link models.
+
+Any object exposing ``uplink_seconds(nbytes)`` / ``uplink_energy_mj(nbytes)``
+(``WirelessNetwork`` from the paper's Table III, or the TPU ``Interconnect``)
+backs an :class:`Uplink`.  The link is a FIFO pipe: when several edge devices
+share it, a transfer waits until the link drains — that queueing delay is the
+contention term that only appears at the request-stream level (JointDNN
+Sec. V observes the same effect on shared cellular uplinks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.core.wireless import get_link
+
+
+@dataclass
+class LinkStats:
+    bytes_sent: float = 0.0
+    busy_s: float = 0.0               # time the link actually transmitted
+    wait_s: float = 0.0               # total contention wait across transfers
+    energy_mj: float = 0.0            # mobile radio energy (paper power model)
+    n_transfers: int = 0
+
+
+class Uplink:
+    """Serial FIFO link shared by a set of edge devices."""
+
+    def __init__(self, link_model, name: Optional[str] = None):
+        self.model = link_model
+        self.name = name or getattr(link_model, "name", "link")
+        self.free_at = 0.0
+        self.stats = LinkStats()
+
+    @classmethod
+    def named(cls, name: str) -> "Uplink":
+        return cls(get_link(name), name=name)
+
+    def transfer_seconds(self, nbytes: float) -> float:
+        return self.model.uplink_seconds(nbytes)
+
+    def transfer(self, nbytes: float, now: float) -> Tuple[float, float]:
+        """Enqueue ``nbytes`` at virtual time ``now``; returns
+        ``(start, done)`` — ``start > now`` means the link was busy."""
+        start = max(now, self.free_at)
+        dur = self.transfer_seconds(nbytes)
+        done = start + dur
+        self.free_at = done
+        s = self.stats
+        s.bytes_sent += nbytes
+        s.busy_s += dur
+        s.wait_s += start - now
+        s.energy_mj += self.model.uplink_energy_mj(nbytes)
+        s.n_transfers += 1
+        return start, done
+
+    def nominal_bytes_per_s(self) -> float:
+        return 1.0 / max(self.model.uplink_seconds(1.0), 1e-30)
+
+    def observed_bytes_per_s(self, now: float) -> float:
+        """Effective per-request goodput including contention waits — what a
+        device actually experiences, and what the adaptive controller feeds
+        back into the selection phase."""
+        s = self.stats
+        occupied = s.busy_s + s.wait_s
+        if s.n_transfers == 0 or occupied <= 0:
+            return self.nominal_bytes_per_s()
+        return s.bytes_sent / occupied
+
+    def transfer_energy_mj(self, nbytes: float) -> float:
+        return self.model.uplink_energy_mj(nbytes)

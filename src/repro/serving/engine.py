@@ -65,6 +65,37 @@ class ServingEngine:
         self._prefill_into(slot, req)
         return req
 
+    def submit_prefilled(self, prompt_len: int, caches, last_logits,
+                         max_new_tokens: int = 32, temperature: float = 0.0,
+                         eos_id: Optional[int] = None) -> Request:
+        """Admit a request whose prefill ran elsewhere (the split runtime's
+        edge/cloud halves): inject its per-stage caches into a free slot and
+        sample the first token from the externally computed last-position
+        logits.  ``caches`` must match the engine's stage-cache pytree with
+        batch dim 1; seq dims shorter than ``max_len`` are padded."""
+        assert prompt_len < self.max_len, "prompt exceeds cache"
+        req = Request(self._uid, np.zeros((prompt_len,), np.int32),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      eos_id=eos_id)
+        self._uid += 1
+        slot = self._free_slot()
+        self._write_slot(slot, caches)
+        self.positions[slot] = prompt_len
+        self.active[slot] = req
+        last_logits = jnp.asarray(last_logits)
+        req.logits_history.append(jax.device_get(last_logits))
+        tok = self._sample(last_logits, req)
+        req.generated.append(tok)
+        if (req.eos_id is not None and tok == req.eos_id) or \
+                req.max_new_tokens <= 1:
+            req.done = True
+            self.active[slot] = None
+        return req
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for r in self.active if r is not None)
+
     def run(self, requests_done: Callable[[], bool] = None, max_steps: int = 10_000):
         steps = 0
         while any(r is not None for r in self.active) and steps < max_steps:
@@ -88,7 +119,12 @@ class ServingEngine:
         self.positions[slot] = S
         self.active[slot] = req
         req.logits_history.append(jax.device_get(logits[0, -1]))
-        req.generated.append(self._sample(logits[0, -1], req))
+        tok = self._sample(logits[0, -1], req)
+        req.generated.append(tok)
+        if (req.eos_id is not None and tok == req.eos_id) or \
+                req.max_new_tokens <= 1:
+            req.done = True
+            self.active[slot] = None
 
     def _write_slot(self, slot: int, req_cache):
         """Copy a single-request cache into batch slot ``slot`` of the pool,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.quantization import dequantize, quantize
 from repro.models import model as M
 from repro.models import transformer as tfm
@@ -153,7 +154,7 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
 
     axes = mesh.axis_names
     data_ax = "data" if "data" in axes else None
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_body, mesh=mesh,
         in_specs=(P(), P(data_ax, None)),
         out_specs=P("pod", None, data_ax, None),

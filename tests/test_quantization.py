@@ -3,6 +3,10 @@ the paper's wire format relies on."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property suites need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quantization import dequantize, fake_quant, quantize, wire_bytes

@@ -1,5 +1,9 @@
 """Property tests for the layer-stack segmentation (hypothesis): segments
 must reconstruct the flat def list exactly for arbitrary patterns."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property suites need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
