@@ -227,6 +227,74 @@ def bench_wirebits():
               f"wire_bytes_per_batch={wb}")
 
 
+def bench_bank():
+    """Shared-weight split bank vs per-split model init (the tentpole's
+    before/after): build time, parameter bytes and compile-cache entries for
+    the full candidate sweep of an 8-layer config."""
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.runtime.split_exec import SplitModelBank
+
+    def tree_bytes(trees):
+        seen, total = set(), 0
+        for t in trees:
+            for leaf in jax.tree.leaves(t):
+                if id(leaf) not in seen:
+                    seen.add(id(leaf))
+                    total += leaf.nbytes
+        return total
+
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), num_layers=8)
+    d_r = 16
+    splits = list(range(1, cfg.num_layers))
+
+    # before: one full model init per candidate split (what SplitRunner did)
+    t0 = time.perf_counter()
+    naive_params = []
+    for s in splits:
+        scfg = cfg.with_butterfly(s, d_r)
+        built = M.build(scfg)
+        p, _ = M.init_model(jax.random.key(0), built)
+        naive_params.append(p)
+    naive_s = time.perf_counter() - t0
+    naive_bytes = tree_bytes(naive_params)
+
+    # after: one backbone + per-split butterfly views
+    t0 = time.perf_counter()
+    bank = SplitModelBank(cfg, d_r)
+    runners = [bank.runner(s) for s in splits]
+    bank_s = time.perf_counter() - t0
+    bank_bytes = tree_bytes([r.params for r in runners])
+
+    print(f"bank/build_naive,{naive_s*1e6:.0f},"
+          f"{len(splits)}_inits bytes={naive_bytes/1e6:.1f}MB")
+    print(f"bank/build_shared,{bank_s*1e6:.0f},"
+          f"1_init+{len(splits)}_butterflies bytes={bank_bytes/1e6:.1f}MB")
+    print(f"bank/reduction,0,build_time={naive_s/max(bank_s,1e-9):.1f}x "
+          f"param_bytes={naive_bytes/bank_bytes:.1f}x")
+
+    # compile-cache behaviour: a candidate sweep at one prompt length plus a
+    # prompt-length sweep on one split — bucketing folds shapes together
+    toks = np.ones((1, 16), np.int32)
+    t0 = time.perf_counter()
+    for r in runners:
+        payload, scales, _ = r.edge_half(r.params, toks)
+        r.cloud_half(r.params, payload, scales)
+    sweep_entries = bank.jit_cache_entries
+    seqs = (24, 31, 40)                  # 3 fresh shapes -> 2 seq buckets
+    for S in seqs:
+        runners[0].edge_half(runners[0].params, np.ones((1, S), np.int32))
+    us = (time.perf_counter() - t0) * 1e6
+    added = bank.jit_cache_entries - sweep_entries
+    print(f"bank/jit_cache,{us/(len(splits)*2+len(seqs)):.0f},"
+          f"entries_full_split_sweep={sweep_entries} "
+          f"seq_sweep_{'_'.join(map(str, seqs))}_added={added} "
+          f"(exact-shape compiles would add {len(seqs)})")
+
+
 def bench_runtime():
     """Split-serving runtime: cloud-only (raw upload) vs the butterfly split
     under identical Poisson traffic, plus the adaptive controller's split
@@ -290,10 +358,21 @@ def bench_runtime():
     print(f"runtime/adaptive,{us/13:.0f},split "
           f"{traj[0]['split']}->{traj[-1]['split']} as load crosses 0.9")
     print(f"runtime/json,0,{json.dumps(result, sort_keys=True)}")
+    _append_runtime_artifact(result)
+
+
+def _append_runtime_artifact(result: dict) -> None:
+    """Append this run's runtime JSON to experiments/BENCH_runtime.json via
+    the one writer in experiments/aggregate.py (which also renders it)."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "experiments"))
+    from aggregate import append_runs
+    append_runs([result])
 
 
 BENCHES = {
     "fig7": bench_fig7,
+    "bank": bench_bank,
     "runtime": bench_runtime,
     "wirebits": bench_wirebits,
     "table4": bench_table4,

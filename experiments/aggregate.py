@@ -2,7 +2,10 @@
 
 Usage: PYTHONPATH=src python experiments/aggregate.py [--dir experiments/dryrun]
 Prints: the section-Dry-run table, the section-Roofline table (single-pod),
-and the multi-pod compile-proof matrix.
+the multi-pod compile-proof matrix, and — when experiments/BENCH_runtime.json
+exists (written by ``benchmarks.run runtime``, or ingested from its CSV
+output via ``--ingest-runtime <csv>``) — the split-serving runtime table
+plus the cross-run perf trajectory.
 """
 from __future__ import annotations
 
@@ -19,6 +22,8 @@ SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 def load(d):
     recs = {}
+    if not os.path.isdir(d):
+        return recs
     for f in sorted(os.listdir(d)):
         if not f.endswith(".json"):
             continue
@@ -35,10 +40,88 @@ def fmt_bytes(b):
     return f"{b/1e9:.2f}GB" if b > 1e9 else f"{b/1e6:.1f}MB"
 
 
+RUNTIME_JSON = os.path.join(os.path.dirname(__file__), "BENCH_runtime.json")
+
+
+def append_runs(results, out_path: str = RUNTIME_JSON) -> None:
+    """Append runtime-benchmark result docs to the BENCH_runtime.json
+    trajectory (the one writer — ``benchmarks.run runtime`` calls this
+    too).  A corrupt or schema-less existing file starts a fresh doc."""
+    doc = {"benchmark": "benchmarks.run runtime", "runs": []}
+    if os.path.exists(out_path):
+        try:
+            loaded = json.load(open(out_path))
+            if isinstance(loaded.get("runs"), list):
+                doc = loaded
+        except (ValueError, OSError):
+            pass
+    for result in results:
+        doc["runs"].append(dict(result, run=len(doc["runs"])))
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def ingest_runtime(csv_path: str, out_path: str = RUNTIME_JSON) -> int:
+    """Parse ``runtime/json`` rows out of a ``benchmarks.run runtime`` CSV
+    capture and append them to the BENCH_runtime.json trajectory."""
+    results = [json.loads(line.split(",", 2)[2])
+               for line in open(csv_path)
+               if line.startswith("runtime/json,")]
+    if results:
+        append_runs(results, out_path)
+    return len(results)
+
+
+def print_runtime(path: str = RUNTIME_JSON):
+    if not os.path.exists(path):
+        return
+    doc = json.load(open(path))
+    runs = doc.get("runs", [])
+    if not runs:
+        return
+    last = runs[-1]
+    w = last.get("workload", {})
+    print(f"\n### Split-serving runtime (run {last.get('run', len(runs)-1)}: "
+          f"{w.get('arch', '?')}, {w.get('layers', '?')}L, "
+          f"{w.get('requests', '?')} requests, d_r={w.get('d_r', '?')})\n")
+    print("| network | cloud-only p50 | split int8 p50 | speedup "
+          "| split wire/req | cloud wire/req |")
+    print("|---|---|---|---|---|---|")
+    for net in ("3g", "4g", "wifi"):
+        row = last.get("networks", {}).get(net)
+        if row is None:
+            continue
+        print(f"| {net} | {row['cloud_only']['latency_p50_ms']:.2f}ms "
+              f"| {row['split_int8']['latency_p50_ms']:.2f}ms "
+              f"| {row['split_speedup_vs_cloud']:.1f}x "
+              f"| {row['split_int8']['mean_wire_kb']:.2f}kB "
+              f"| {row['cloud_only']['mean_wire_kb']:.2f}kB |")
+    ad = last.get("adaptive", {})
+    if ad:
+        print(f"\nadaptive: split {ad.get('split_at_low_load')} -> "
+              f"{ad.get('split_at_high_load')} under the load ramp "
+              f"(moved deeper past 0.9: {ad.get('moved_deeper_past_0.9')})")
+    if len(runs) > 1:
+        print("\n#### Perf trajectory (split int8 p50 on 3g, per run)\n")
+        for r in runs:
+            p50 = r.get("networks", {}).get("3g", {}) \
+                   .get("split_int8", {}).get("latency_p50_ms")
+            spd = r.get("networks", {}).get("3g", {}) \
+                   .get("split_speedup_vs_cloud")
+            print(f"run {r.get('run', '?')}: {p50}ms ({spd}x vs cloud-only)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--ingest-runtime", metavar="CSV",
+                    help="append runtime/json rows from a benchmarks.run "
+                         "runtime CSV capture to BENCH_runtime.json")
     args = ap.parse_args()
+    if args.ingest_runtime:
+        n = ingest_runtime(args.ingest_runtime)
+        print(f"ingested {n} runtime run(s) into {RUNTIME_JSON}")
     recs = load(args.dir)
 
     def get(arch, shape, mesh):
@@ -96,6 +179,7 @@ def main():
                     missing.append((a, s, mesh))
     n_ok = sum(1 for lst in recs.values() for f, r in lst if "compute_s" in r)
     print(f"\nartifacts: {n_ok} compiled records; outstanding: {missing if missing else 'none'}")
+    print_runtime()
 
 
 if __name__ == "__main__":

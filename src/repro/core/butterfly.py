@@ -46,8 +46,14 @@ def reduce_unit(params, x: jax.Array, *, use_kernel: bool = False,
     return quantize(r, wire_bits)
 
 
-def restore_unit(params, codes: jax.Array, scales: jax.Array, dtype):
+def restore_unit(params, codes: jax.Array, scales: jax.Array, dtype,
+                 *, use_kernel: bool = False):
     """Cloud half: dequantize + project back to d."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.butterfly_dequant_restore(codes, scales,
+                                              params["w_restore"],
+                                              out_dtype=dtype)
     r = dequantize(codes, scales, dtype)
     return r @ params["w_restore"]
 
@@ -56,7 +62,16 @@ def apply_butterfly(params, x: jax.Array, *, wire_bits: int = 8,
                     train: bool = True, use_kernel: bool = False) -> jax.Array:
     """In-graph form (training / single-mesh inference): the wire is a
     fake-quant so gradients flow straight through (paper: trained
-    end-to-end)."""
+    end-to-end).  With ``train=False, use_kernel=True`` the quantized wire
+    runs through the fused Pallas reduce+quant / dequant+restore kernels
+    (the serving hot path; a (B, 1, d) decode row takes the kops fast path)."""
+    if not train and use_kernel and wire_bits <= 8:
+        from repro.kernels import ops as kops
+        codes, scales = kops.butterfly_reduce_quant(x, params["w_reduce"],
+                                                    bits=wire_bits)
+        return kops.butterfly_dequant_restore(codes, scales,
+                                              params["w_restore"],
+                                              out_dtype=x.dtype)
     r = x @ params["w_reduce"]
     if train:
         r = fake_quant(r, wire_bits)

@@ -35,15 +35,38 @@ def _pad_to(x, multiple: int, axis: int):
     return jnp.pad(x, widths), pad
 
 
+# Row counts at or below this skip the Pallas grid entirely: a decode step's
+# (B, 1, d) residual row would otherwise pad to an 8-row tile and pay the
+# pallas_call dispatch for a single MXU-tile of work.  The fast path runs the
+# identical math (f32-accumulated dot + absmax quant), so kernel and fast
+# path are bitwise-equal in interpret mode.
+_FAST_PATH_ROWS = 8
+
+
+def _reduce_quant_rows(xf, w_reduce, qmax: int):
+    r = jax.lax.dot_general(xf, w_reduce, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    absmax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(r / scale), -qmax - 1, qmax)
+    return codes.astype(jnp.int8), scale
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "block_t"))
 def butterfly_reduce_quant(x, w_reduce, *, bits: int = 8,
                            block_t: int = 256) -> Tuple[jax.Array, jax.Array]:
     """x: (..., d) -> (codes (..., d_r) int8, scales (..., 1) f32)."""
+    assert bits <= 8, "fused codec emits int8 codes; wider wires go eager"
     shape = x.shape
     d = shape[-1]
     d_r = w_reduce.shape[1]
     xf = x.reshape(-1, d)
     T = xf.shape[0]
+    if T <= _FAST_PATH_ROWS:                   # (B, 1, d) decode-row fast path
+        codes, scales = _reduce_quant_rows(xf, w_reduce,
+                                           2 ** (bits - 1) - 1)
+        return (codes.reshape(*shape[:-1], d_r),
+                scales.reshape(*shape[:-1], 1))
     block = min(block_t, max(8, T))
     xf, pad_t = _pad_to(xf, block, 0)
     codes, scales = butterfly_reduce_quant_kernel(
@@ -62,6 +85,11 @@ def butterfly_dequant_restore(codes, scales, w_restore, *,
     cf = codes.reshape(-1, d_r)
     sf = scales.reshape(-1, 1)
     T = cf.shape[0]
+    if T <= _FAST_PATH_ROWS:                   # (B, 1, d_r) decode-row fast path
+        r = cf.astype(jnp.float32) * sf
+        out = jax.lax.dot_general(r, w_restore, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return out.astype(out_dtype).reshape(*shape[:-1], d)
     block = min(block_t, max(8, T))
     cf, pad_t = _pad_to(cf, block, 0)
     sf, _ = _pad_to(sf, block, 0)

@@ -135,6 +135,91 @@ def split_defs(defs: Sequence[LayerDef], boundary: Optional[int]) -> List[List[S
 
 
 # ---------------------------------------------------------------------------
+# layer-range views over a full stacked stage (shared-weight split bank)
+# ---------------------------------------------------------------------------
+
+
+def _range_spans(segments: Sequence[Segment], lo: int, hi: int):
+    """Walk a stage's segmentation and yield, for flat layers [lo, hi), either
+    aligned repeat-slices or per-layer peels:
+
+      ("slice", seg_index, rep_lo, rep_hi)    — whole repeats [rep_lo, rep_hi)
+      ("peel",  seg_index, rep, pos_in_unit)  — one layer of one repeat
+
+    A boundary that lands inside a repeat unit peels individual layers so any
+    0 < boundary < N is representable (zamba2-style multi-layer units)."""
+    base = 0
+    for si, seg in enumerate(segments):
+        u = len(seg.unit)
+        span = u * seg.repeats
+        s, e = max(lo, base) - base, min(hi, base + span) - base
+        if s < e:
+            # peel only the unaligned head/tail remainders; the aligned
+            # middle keeps its stacked-repeat scan
+            head = min(e, (s + u - 1) // u * u)
+            tail = max(head, e // u * u)
+            for li in range(s, head):
+                yield ("peel", si, li // u, li % u)
+            if head < tail:
+                yield ("slice", si, head // u, tail // u)
+            for li in range(tail, e):
+                yield ("peel", si, li // u, li % u)
+        base += span
+
+
+def range_segments(segments: Sequence[Segment], lo: int, hi: int) -> List[Segment]:
+    """Segmentation of the flat layer range [lo, hi) of a full stage; the
+    structure matches what :func:`slice_stage_params` produces, so cache
+    templates built from it line up with the sliced params."""
+    out: List[Segment] = []
+    for span in _range_spans(segments, lo, hi):
+        if span[0] == "slice":
+            _, si, r0, r1 = span
+            out.append(Segment(unit=segments[si].unit, repeats=r1 - r0))
+        else:
+            _, si, _, pos = span
+            out.append(Segment(unit=(segments[si].unit[pos],), repeats=1))
+    return out
+
+
+def slice_stage_params(segments: Sequence[Segment], stage_params, lo: int,
+                       hi: int):
+    """Restrict a stage's stacked params to flat layers [lo, hi).
+
+    Returns ``(segments', params')`` where every leaf of ``params'`` is a
+    static slice of the corresponding full stacked leaf — under jit these are
+    views into the one shared backbone, so materializing every candidate
+    split never copies the parameter set."""
+    out_segs: List[Segment] = []
+    out_params = []
+    for span in _range_spans(segments, lo, hi):
+        if span[0] == "slice":
+            _, si, r0, r1 = span
+            out_segs.append(Segment(unit=segments[si].unit, repeats=r1 - r0))
+            out_params.append([jax.tree.map(lambda a: a[r0:r1], up)
+                               for up in stage_params[si]])
+        else:
+            _, si, rep, pos = span
+            out_segs.append(Segment(unit=(segments[si].unit[pos],), repeats=1))
+            out_params.append([jax.tree.map(lambda a: a[rep:rep + 1],
+                                            stage_params[si][pos])])
+    return out_segs, out_params
+
+
+def apply_layer_range(segments: Sequence[Segment], stage_params, x, lo: int,
+                      hi: int, *, cfg, pctx, mode, range_cache, pos,
+                      enc_out=None, shared_params=None, use_kernel=False,
+                      causal=True):
+    """Run flat layers [lo, hi) of a full stacked stage.  ``range_cache``
+    must be structured per :func:`range_segments` (see init_stage_cache)."""
+    segs, params = slice_stage_params(segments, stage_params, lo, hi)
+    return apply_stage(segs, params, x, cfg=cfg, pctx=pctx, mode=mode,
+                       stage_cache=range_cache, pos=pos, enc_out=enc_out,
+                       shared_params=shared_params, use_kernel=use_kernel,
+                       causal=causal)
+
+
+# ---------------------------------------------------------------------------
 # per-layer init
 # ---------------------------------------------------------------------------
 

@@ -2,15 +2,21 @@
 
 EdgeDevice is a serial processor (one prefill at a time, like a phone's NPU):
 requests queue at the device, run the edge half (layers [0, split) + the
-butterfly reduce/quantize), then contend for the shared uplink.
+butterfly reduce/quantize), then contend for the shared uplink.  Virtual
+time stays serial per request, but the *numerics* coalesce: when a burst
+queues at the device, one batched ``edge_half`` call computes every queued
+request's payload (results are sliced back per request), so the jax hot
+path runs at (B, S) instead of B separate batch-1 dispatches.
 
 CloudServer is a serial accelerator running a continuous-batching loop over
-the hosted partitioned models (one ServingEngine per split): it alternates
-admitting one pending prefill (restore + layers [split, N) + LM head) and
-running one batched decode step over all active slots — exactly the
-ServingEngine's "prefill one at a time, decode batched" discipline, but on
-the virtual clock, with service times derated by ``1/(1 - load)`` (the
-paper's K_cloud congestion knob).
+the hosted partitioned models (ServingEngines over one shared-weight
+``SplitModelBank`` backbone): each service turn admits every pending
+prefill the slot pool can hold (serial cumulative durations — same virtual
+timeline as one-at-a-time admission) and then runs batched decode steps
+over all active slots, with service times derated by ``1/(1 - load)`` (the
+paper's K_cloud congestion knob).  Cloud-half numerics batch the same way
+the edge does: the first ``_prefill_done`` of a burst computes restore +
+layers [split, N) for every in-flight payload of that split in one call.
 """
 from __future__ import annotations
 
@@ -60,10 +66,13 @@ class EdgeDevice:
         self.telemetry = telemetry
         self.free_at = 0.0
         self._local_engine = None
+        self._numerics_pending: List[SimRequest] = []
 
     def on_arrival(self, req: SimRequest) -> None:
         t = req.trace
         t.t_arrival = self.loop.now
+        if self.mode == "split" and self.bank is not None:
+            self._numerics_pending.append(req)
         start = max(self.loop.now, self.free_at)
         S = t.prompt_len
         if self.mode == "split":
@@ -82,11 +91,9 @@ class EdgeDevice:
     def _edge_done(self, req: SimRequest) -> None:
         t = req.trace
         t.mobile_energy_mj += self.cost.edge_energy_mj(t.edge_compute_s)
-        if self.mode == "split" and self.bank is not None:
-            runner = self.bank.runner(t.split)
-            payload, scales, cache0 = runner.edge_half(runner.params,
-                                                       req.tokens[None])
-            req.payload = (payload, scales, cache0)
+        if self.mode == "split" and self.bank is not None and \
+                req.payload is None:
+            self._compute_edge_batch(req)
         if self.mode == "edge":
             self._finish_local(req)
             return
@@ -98,6 +105,32 @@ class EdgeDevice:
         t.t_uplink_start, t.t_uplink_done = start, done
         t.mobile_energy_mj += self.uplink.transfer_energy_mj(nbytes)
         self.loop.schedule_at(done, lambda: self.server.on_payload(req))
+
+    def _compute_edge_batch(self, req: SimRequest) -> None:
+        """One batched edge_half over every queued arrival sharing this
+        request's split + prompt shape; results slice back per request.
+        Numerics are time-invariant, so computing a queued request's payload
+        at the head request's completion instant is exact."""
+        import jax
+
+        # MoE routes all tokens of a batch into one shared expert-capacity
+        # pool, so stacking independent requests would change each one's
+        # numerics — coalesce only where batch rows are independent
+        if self.bank.batch_numerics_ok:
+            group = [r for r in self._numerics_pending
+                     if r.trace.split == req.trace.split and
+                     r.tokens.shape == req.tokens.shape]
+        else:
+            group = [req]
+        runner = self.bank.runner(req.trace.split)
+        toks = np.stack([r.tokens for r in group])
+        payload, scales, cache0 = runner.edge_half(runner.params, toks)
+        for i, r in enumerate(group):
+            r.payload = (payload[i:i + 1], scales[i:i + 1],
+                         jax.tree.map(lambda a: a[:, i:i + 1], cache0))
+            self._numerics_pending.remove(r)
+        self.telemetry.counters["edge_numerics_batches"] += 1
+        self.telemetry.counters["edge_numerics_requests"] += len(group)
 
     def _finish_local(self, req: SimRequest) -> None:
         """Mobile-only baseline: everything already ran on the device."""
@@ -150,7 +183,9 @@ class CloudServer:
         self.slot_history: List[tuple] = []       # (uid, slot) admissions
         self._engines: Dict[int, object] = {}     # split -> ServingEngine
         self._virtual_left: Dict[int, int] = {}   # uid -> decode steps left
+        self._cloud_results: Dict[int, tuple] = {}  # uid -> (logits, c1, c0)
         self._busy = False
+        self._prefill_busy_until = 0.0            # serial accelerator frontier
         self.peak_active = 0
 
     # -- load signal --------------------------------------------------------
@@ -194,20 +229,37 @@ class CloudServer:
 
     def _service(self) -> None:
         now = self.loop.now
-        slot = self._free_slot()
-        if self.pending and slot >= 0:
+        # admit every pending prefill the slot pool can hold in one service
+        # turn; durations stay serial (cumulative past the busy frontier),
+        # so the accelerator never runs two prefills — or a prefill and a
+        # decode — at once, exactly like one-at-a-time admission
+        start = max(now, self._prefill_busy_until)
+        admitted = 0
+        while self.pending:
+            slot = self._free_slot()
+            if slot < 0:
+                break
             req = self.pending.popleft()
-            self._admit(req, slot, now)
+            start = self._admit(req, slot, start)
+            admitted += 1
+        if admitted:
+            self._prefill_busy_until = start
+            if admitted > 1:
+                self.telemetry.counters["cloud_prefill_bursts"] += 1
             return
+        if now < self._prefill_busy_until:
+            return                      # mid-burst: next _prefill_done rearms
         if self.num_active > 0:
             self._decode_step(now)
             return
         self._busy = False
 
-    def _admit(self, req: SimRequest, slot: int, now: float) -> None:
+    def _admit(self, req: SimRequest, slot: int, start: float) -> float:
+        """Place ``req`` in ``slot`` with its prefill starting at ``start``;
+        returns the prefill completion time (the next admission's start)."""
         t = req.trace
-        t.t_cloud_start = now
-        load = min(max(self.background_load(now), 0.0), 0.99)
+        t.t_cloud_start = start
+        load = min(max(self.background_load(start), 0.0), 0.99)
         S = t.prompt_len
         if self.mode == "split":
             dur = self.cost.cloud_prefill_s(t.split, S, self.d_r, load)
@@ -217,7 +269,37 @@ class CloudServer:
         self.slots[slot] = req
         self.slot_history.append((t.uid, slot))
         self.peak_active = max(self.peak_active, self.num_active)
-        self.loop.schedule(dur, lambda: self._prefill_done(req))
+        self.loop.schedule_at(start + dur, lambda: self._prefill_done(req))
+        return start + dur
+
+    def _cloud_numerics(self, req: SimRequest) -> tuple:
+        """(last logits row, cache1 slice, cache0) for ``req``; the first
+        call of a burst batches the cloud half over every in-flight payload
+        of the same split (admitted or still pending) in one jitted call."""
+        import jax
+        import jax.numpy as jnp
+
+        if req.uid not in self._cloud_results:
+            split = req.trace.split
+            group = [req]
+            if self.bank.batch_numerics_ok:   # see _compute_edge_batch
+                group += [
+                    r for r in list(self.slots) + list(self.pending)
+                    if r is not None and r is not req
+                    and r.payload is not None and r.trace.split == split
+                    and r.payload[0].shape == req.payload[0].shape]
+            runner = self.bank.runner(split)
+            payload = jnp.concatenate([r.payload[0] for r in group])
+            scales = jnp.concatenate([r.payload[1] for r in group])
+            logits, cache1 = runner.cloud_half(runner.params, payload, scales)
+            for i, r in enumerate(group):
+                self._cloud_results[r.uid] = (
+                    logits[i], jax.tree.map(lambda a: a[:, i:i + 1], cache1),
+                    r.payload[2])
+                r.payload = None
+            self.telemetry.counters["cloud_numerics_batches"] += 1
+            self.telemetry.counters["cloud_numerics_prefills"] += len(group)
+        return self._cloud_results.pop(req.uid)
 
     def _prefill_done(self, req: SimRequest) -> None:
         t = req.trace
@@ -225,12 +307,9 @@ class CloudServer:
         eng = self._engine(t.split)
         if eng is not None:
             if self.mode == "split":
-                runner = self.bank.runner(t.split)
-                payload, scales, cache0 = req.payload
-                logits, cache1 = runner.cloud_half(runner.params, payload,
-                                                   scales)
+                logits_row, cache1, cache0 = self._cloud_numerics(req)
                 req.engine_req = eng.submit_prefilled(
-                    t.prompt_len, [cache0, cache1], logits[0],
+                    t.prompt_len, [cache0, cache1], logits_row,
                     max_new_tokens=req.max_new_tokens)
             else:
                 req.engine_req = eng.submit(

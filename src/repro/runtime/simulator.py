@@ -123,6 +123,13 @@ class Simulation:
         self.loop.run()
         assert self._remaining == 0, \
             f"{self._remaining} requests never completed"
+        if self.bank is not None:
+            c = self.telemetry.counters
+            c["engine_decode_steps"] = sum(
+                e.decode_steps for e in self.server._engines.values()) + sum(
+                d._local_engine.decode_steps for d in self.devices
+                if d._local_engine is not None)
+            c["bank_jit_cache_entries"] = self.bank.jit_cache_entries
         return self.telemetry
 
     # ------------------------------------------------------------- internals

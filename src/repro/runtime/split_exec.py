@@ -7,17 +7,27 @@ cost model (core/profiler) driven by the deterministic virtual clock — a
 CPU-only container can therefore simulate a Jetson-class edge talking to a
 GPU-class cloud over 3G with reproducible traces.
 
-The cloud hosts one partitioned model per candidate split (the paper's "M
-partitioned models", Sec. III-C); :class:`SplitModelBank` builds them
-lazily.  For multi-token requests the edge hands its stage-0 KV cache to the
+The cloud hosts the paper's "M partitioned models" (Sec. III-C) as ONE
+shared backbone parameter tree: :class:`SplitModelBank` initialises the
+model once and every candidate split's edge/cloud halves slice the stacked
+layer params in-graph (``models/transformer.slice_stage_params``), so bank
+memory stays O(1) in the number of hosted splits and only the tiny
+per-split butterfly projections are materialised per candidate.
+:class:`SplitRunner` is a thin facade over the bank's compile cache: jitted
+edge/cloud/prefill/decode functions are keyed on ``(kind, split)`` with
+bucket-padded ``(B, S)`` shapes, so a candidate sweep re-uses executables
+instead of recompiling per prompt length.  The int8 wire runs through the
+fused Pallas reduce+quant / dequant+restore kernels (kernels/ops.py).
+
+For multi-token requests the edge hands its stage-0 KV cache to the
 cloud alongside the codes (prefill/decode-disaggregation style cache
 transfer) so decode runs entirely cloud-side; streaming decode over the wire
 is the DESIGN.md extension.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 from repro.core import costs
 from repro.core.planner import wire_mode_bytes
@@ -104,104 +114,391 @@ class CostModel:
 
 
 # ---------------------------------------------------------------------------
-# real numerics: the per-split partitioned models
+# real numerics: one shared backbone, per-split views
 # ---------------------------------------------------------------------------
 
 
-class SplitRunner:
-    """One partitioned model: jitted edge half, cloud half, full reference."""
-
-    def __init__(self, cfg, *, seed: int = 0, wire_mode: str = "int8"):
-        import jax
-        import jax.numpy as jnp
-
-        from repro.core.quantization import dequantize, quantize
-        from repro.models import model as M
-        from repro.models import transformer as tfm
-        from repro.models.common import embed, rms_norm, unembed
-        from repro.models.parallel import LOCAL
-
-        assert cfg.butterfly is not None, "SplitRunner needs a butterfly cfg"
-        assert wire_mode in ("raw", "reduced", "int8"), wire_mode
-        self.cfg = cfg
-        self.wire_mode = wire_mode
-        self.built = M.build(cfg)
-        self.params, _ = M.init_model(jax.random.key(seed), self.built)
-        dt = jnp.dtype(cfg.dtype)
-        stages = self.built.stages
-        shared = "shared_attn"
-
-        def edge_half(params, toks):
-            scale = cfg.arch_type == "dense" and cfg.act == "gelu"
-            x = embed(params["embed"], toks, scale=scale)
-            x, cache0, _ = tfm.apply_stage(
-                list(stages[0]), params["stages"][0], x, cfg=cfg, pctx=LOCAL,
-                mode="prefill", stage_cache=None, pos=None,
-                shared_params=params.get(shared))
-            if wire_mode == "raw":
-                return x, jnp.zeros((x.shape[0], x.shape[1], 1), jnp.float32), cache0
-            r = x @ params["butterfly"]["w_reduce"]
-            if wire_mode == "reduced":
-                return r, jnp.zeros((r.shape[0], r.shape[1], 1), jnp.float32), cache0
-            codes, scales = quantize(r, cfg.butterfly.wire_bits)
-            return codes, scales, cache0
-
-        def cloud_half(params, payload, scales):
-            if wire_mode == "raw":
-                x = payload
-            else:
-                r = payload if wire_mode == "reduced" else \
-                    dequantize(payload, scales, dt)
-                x = r @ params["butterfly"]["w_restore"]
-            x, cache1, _ = tfm.apply_stage(
-                list(stages[1]), params["stages"][1], x, cfg=cfg, pctx=LOCAL,
-                mode="prefill", stage_cache=None, pos=None,
-                shared_params=params.get(shared))
-            x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
-            table = params["embed"] if cfg.tie_embeddings else params["head"]
-            return unembed(table, x, cfg.logit_softcap)[:, 0], cache1
-
-        self.edge_half = jax.jit(edge_half)
-        self.cloud_half = jax.jit(cloud_half)
-        self._M = M
-
-    def make_engine(self, *, max_batch: int, max_len: int, seed: int = 0):
-        from repro.serving.engine import ServingEngine
-        return ServingEngine(self.params, self.built, max_batch=max_batch,
-                             max_len=max_len, seed=seed)
-
-    def reference_prefill(self, toks):
-        """Single-mesh forward (what the split path must reproduce)."""
-        import jax.numpy as jnp
-        logits, caches = self._M.forward_prefill(
-            self.params, self.built, {"tokens": jnp.asarray(toks)})
-        return logits, caches
+def _next_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class SplitModelBank:
-    """Lazily built {candidate split -> SplitRunner}, shared base config.
+    """One backbone parameter tree serving every candidate split.
 
     The paper's server hosts M partitioned models and the selection phase
-    picks among them; candidates here are layer boundaries."""
+    picks among them; here the M models are in-graph slices of a single
+    stacked parameter set, so materialising more candidates costs only the
+    per-split butterfly projections (d*d_r + d_r*d params each) plus compile
+    cache entries — not O(num_layers) full parameter copies."""
 
     def __init__(self, base_cfg, d_r: int, *, wire_bits: int = 8,
                  wire_mode: str = "int8", seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import model as M
+        from repro.models import transformer as tfm
+
         assert base_cfg.num_layers >= 2, "need >=2 layers to split"
+        assert wire_mode in ("raw", "reduced", "int8"), wire_mode
+        if base_cfg.butterfly is not None:
+            import dataclasses
+            base_cfg = dataclasses.replace(base_cfg, butterfly=None)
         self.base_cfg = base_cfg
         self.d_r = d_r
         self.wire_bits = wire_bits
         self.wire_mode = wire_mode
         self.seed = seed
-        self._runners: Dict[int, SplitRunner] = {}
 
+        # THE one backbone init (regardless of how many splits materialize)
+        self.built = M.build(base_cfg)
+        self.params, _ = M.init_model(jax.random.key(seed), self.built)
+        self._M, self._tfm = M, tfm
+        self._dt = jnp.dtype(base_cfg.dtype)
+        self._defs = tfm.build_layer_defs(base_cfg)
+
+        # seq bucketing is only numerics-preserving when padded tail rows
+        # cannot leak into real rows: pure causal global attention.  Windowed
+        # ring caches, SSM/xLSTM recurrent state and MoE capacity contention
+        # all observe the padding, so those families compile per exact shape.
+        self._seq_bucket_ok = (not base_cfg.is_encdec and all(
+            d.mixer == "attn" and d.window is None and not d.cross
+            for d in self._defs))
+        # batch rows are independent everywhere except MoE (shared capacity);
+        # the actors also consult this before coalescing request numerics
+        self._batch_bucket_ok = all(d.ffn != "moe" for d in self._defs)
+        # the fused Pallas codec emits int8 codes; wider wires (wire_bits=16
+        # -> int16 codes) take the eager quantize/dequantize path
+        self._kernel_wire_ok = wire_bits <= 8
+
+        self._butterfly: Dict[int, dict] = {}
+        self._runners: Dict[int, "SplitRunner"] = {}
+        self._fns: Dict[Tuple[str, int], object] = {}     # compile cache
+        self._cache_templates: Dict[Tuple[int, int, int, int], object] = {}
+        self.jit_cache_keys: set = set()   # (kind, split, B_bucket, S_bucket)
+
+    # ------------------------------------------------------------------ api
     @property
     def candidates(self) -> Tuple[int, ...]:
         return tuple(range(1, self.base_cfg.num_layers))
 
-    def runner(self, split: int) -> SplitRunner:
+    @property
+    def jit_cache_entries(self) -> int:
+        return len(self.jit_cache_keys)
+
+    @property
+    def batch_numerics_ok(self) -> bool:
+        """Whether independent requests may be stacked into one batch
+        without changing any request's numerics (False for MoE, whose
+        expert-capacity pool couples the batch)."""
+        return self._batch_bucket_ok
+
+    def runner(self, split: int) -> "SplitRunner":
         if split not in self._runners:
-            cfg = self.base_cfg.with_butterfly(split, self.d_r,
-                                               self.wire_bits)
-            self._runners[split] = SplitRunner(cfg, seed=self.seed,
-                                               wire_mode=self.wire_mode)
+            assert 0 < split < self.base_cfg.num_layers, split
+            self._runners[split] = SplitRunner(self, split)
         return self._runners[split]
+
+    def butterfly_params(self, split: int) -> dict:
+        if split not in self._butterfly:
+            import jax
+            from repro.core.butterfly import init_butterfly
+            from repro.configs.base import ButterflyConfig
+            key = jax.random.fold_in(jax.random.key(self.seed), split)
+            bf = ButterflyConfig(layer=split, d_r=self.d_r,
+                                 wire_bits=self.wire_bits)
+            self._butterfly[split], _ = init_butterfly(
+                key, self.base_cfg.d_model, bf, self._dt)
+        return self._butterfly[split]
+
+    # ----------------------------------------------------- bucketing helpers
+    def _buckets(self, B: int, S: int) -> Tuple[int, int]:
+        Bb = _next_bucket(B, 1) if self._batch_bucket_ok else B
+        Sb = _next_bucket(S, 16) if self._seq_bucket_ok else S
+        return Bb, Sb
+
+    def _pad_toks(self, toks, Bb: int, Sb: int):
+        import jax.numpy as jnp
+        toks = jnp.asarray(toks)
+        B, S = toks.shape
+        if (B, S) != (Bb, Sb):
+            toks = jnp.pad(toks, ((0, Bb - B), (0, Sb - S)))
+        return toks
+
+    def _cache_template(self, stage: int, split: int, B: int, S: int):
+        """ShapeDtypeStruct tree of stage ``stage``'s range cache at true
+        (B, S) — used to slice bucket-padded caches back to request shape.
+        Cached per instance (an lru_cache on the method would pin the bank —
+        and its full backbone — in a class-level cache forever)."""
+        import jax
+        key = (stage, split, B, S)
+        if key not in self._cache_templates:
+            lo, hi = (0, split) if stage == 0 else (split,
+                                                    self.base_cfg.num_layers)
+            segs = self._tfm.range_segments(list(self.built.stages[0]),
+                                            lo, hi)
+            self._cache_templates[key] = jax.eval_shape(
+                lambda: self._tfm.init_stage_cache(segs, self.base_cfg,
+                                                   B, S, self._dt))
+        return self._cache_templates[key]
+
+    def _slice_cache(self, cache, stage: int, split: int, B: int, S: int):
+        import jax
+        template = self._cache_template(stage, split, B, S)
+        def cut(leaf, t):
+            if leaf.shape == t.shape:
+                return leaf
+            return leaf[tuple(slice(0, s) for s in t.shape)]
+        return jax.tree.map(cut, cache, template)
+
+    def engine_stages(self, split: int):
+        """Per-stage segmentations matching the range-sliced param views
+        (the ServingEngine's cache-pool template for this split)."""
+        segs = list(self.built.stages[0])
+        return [self._tfm.range_segments(segs, 0, split),
+                self._tfm.range_segments(segs, split,
+                                         self.base_cfg.num_layers)]
+
+    # ------------------------------------------------- wire transforms (jit)
+    def _wire_ingraph(self, bf, x, *, use_kernel: bool):
+        """The wire as the hosted model sees it, per wire_mode: raw ships the
+        boundary tensor untouched, reduced projects down/up without
+        quantization, int8 round-trips the fused quantized codec."""
+        import jax.numpy as jnp
+        from repro.core.quantization import dequantize, quantize
+        if self.wire_mode == "raw":
+            return x
+        if self.wire_mode == "reduced":
+            return (x @ bf["w_reduce"]) @ bf["w_restore"]
+        if use_kernel and self._kernel_wire_ok:
+            from repro.kernels import ops as kops
+            codes, scales = kops.butterfly_reduce_quant(
+                x, bf["w_reduce"], bits=self.wire_bits)
+            return kops.butterfly_dequant_restore(
+                codes, scales, bf["w_restore"], out_dtype=x.dtype)
+        r = x @ bf["w_reduce"]
+        codes, scales = quantize(r, self.wire_bits)
+        return dequantize(codes, scales, x.dtype) @ bf["w_restore"]
+
+    # --------------------------------------------------- jitted core factory
+    def _fn(self, kind: str, split: int):
+        key = (kind, split)
+        if key not in self._fns:
+            self._fns[key] = getattr(self, f"_make_{kind}")(split)
+        return self._fns[key]
+
+    def _stage_ctx(self):
+        from repro.models.common import embed, rms_norm, unembed
+        from repro.models.parallel import LOCAL
+        cfg = self.base_cfg
+        segs = list(self.built.stages[0])
+        scale = cfg.arch_type == "dense" and cfg.act == "gelu"
+        return cfg, segs, scale, embed, rms_norm, unembed, LOCAL
+
+    def _make_edge(self, split: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops as kops
+        cfg, segs, scale, embed, _, _, LOCAL = self._stage_ctx()
+        tfm, wm = self._tfm, self.wire_mode
+
+        def edge(params, toks):
+            x = embed(params["embed"], toks, scale=scale)
+            x, cache0, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                mode="prefill", range_cache=None, pos=None,
+                shared_params=params.get("shared_attn"))
+            if wm == "raw":
+                return x, jnp.zeros((*x.shape[:2], 1), jnp.float32), cache0
+            if wm == "reduced":
+                r = x @ params["butterfly"]["w_reduce"]
+                return r, jnp.zeros((*r.shape[:2], 1), jnp.float32), cache0
+            if self._kernel_wire_ok:
+                codes, scales = kops.butterfly_reduce_quant(
+                    x, params["butterfly"]["w_reduce"], bits=self.wire_bits)
+            else:
+                from repro.core.quantization import quantize
+                codes, scales = quantize(x @ params["butterfly"]["w_reduce"],
+                                         self.wire_bits)
+            return codes, scales, cache0
+
+        return jax.jit(edge)
+
+    def _make_cloud(self, split: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops as kops
+        cfg, segs, _, _, rms_norm, unembed, LOCAL = self._stage_ctx()
+        tfm, wm, dt = self._tfm, self.wire_mode, self._dt
+
+        def cloud(params, payload, scales, length):
+            if wm == "raw":
+                x = payload
+            elif wm == "reduced":
+                x = payload @ params["butterfly"]["w_restore"]
+            elif self._kernel_wire_ok:
+                x = kops.butterfly_dequant_restore(
+                    payload, scales, params["butterfly"]["w_restore"],
+                    out_dtype=dt)
+            else:
+                from repro.core.quantization import dequantize
+                x = dequantize(payload, scales, dt) @ \
+                    params["butterfly"]["w_restore"]
+            x, cache1, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
+                pctx=LOCAL, mode="prefill", range_cache=None, pos=None,
+                shared_params=params.get("shared_attn"))
+            x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x, cfg.logit_softcap)[:, 0], cache1
+
+        return jax.jit(cloud)
+
+    def _make_prefill(self, split: int):
+        """Full hosted-model prefill (both halves + the wire, one graph):
+        the engine path for cloud-only / mobile-only serving."""
+        import jax
+        cfg, segs, scale, embed, rms_norm, unembed, LOCAL = self._stage_ctx()
+        tfm = self._tfm
+
+        def prefill(params, toks, length):
+            x = embed(params["embed"], toks, scale=scale)
+            x, cache0, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                mode="prefill", range_cache=None, pos=None,
+                shared_params=params.get("shared_attn"))
+            x = self._wire_ingraph(params["butterfly"], x, use_kernel=True)
+            x, cache1, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
+                pctx=LOCAL, mode="prefill", range_cache=None, pos=None,
+                shared_params=params.get("shared_attn"))
+            x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x, cfg.logit_softcap), [cache0, cache1]
+
+        return jax.jit(prefill)
+
+    def _make_decode(self, split: int):
+        """Batched hosted-model decode step for the ServingEngine: fixed
+        (max_batch, 1) shapes, ragged per-slot positions, the wire via the
+        fused kernels' (B, 1, d) fast path.  NOT jit-wrapped here — the
+        engine folds sampling into the same jitted step."""
+        cfg, segs, scale, embed, rms_norm, unembed, LOCAL = self._stage_ctx()
+        tfm = self._tfm
+
+        def decode(params, tokens, caches, pos):
+            x = embed(params["embed"], tokens, scale=scale)
+            x, nc0, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                mode="decode", range_cache=caches[0], pos=pos,
+                shared_params=params.get("shared_attn"))
+            x = self._wire_ingraph(params["butterfly"], x, use_kernel=True)
+            x, nc1, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
+                pctx=LOCAL, mode="decode", range_cache=caches[1], pos=pos,
+                shared_params=params.get("shared_attn"))
+            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x, cfg.logit_softcap), [nc0, nc1]
+
+        return decode
+
+
+class SplitRunner:
+    """Thin facade over the bank's shared backbone + compile cache for one
+    candidate split.  ``runner.params`` shares every backbone leaf with
+    ``bank.params`` (only the per-split butterfly differs)."""
+
+    def __init__(self, bank: SplitModelBank, split: int):
+        self.bank = bank
+        self.split = split
+        self.cfg = bank.base_cfg.with_butterfly(split, bank.d_r,
+                                                bank.wire_bits)
+        self.wire_mode = bank.wire_mode
+        self.built = bank.built
+        # shallow dict: backbone leaves are bank.params' leaves, not copies
+        self.params = dict(bank.params)
+        self.params["butterfly"] = bank.butterfly_params(split)
+
+    # ------------------------------------------------------------ split halves
+    def edge_half(self, params, toks):
+        """Edge stage: layers [0, split) + reduce + quantize.  Accepts
+        (B, S) token batches; returns true-shape (payload, scales, cache0)
+        — the jitted core runs at bucket-padded (B, S)."""
+        import jax.numpy as jnp
+        bank = self.bank
+        toks = jnp.asarray(toks)
+        B, S = toks.shape
+        Bb, Sb = bank._buckets(B, S)
+        out = bank._fn("edge", self.split)(params,
+                                           bank._pad_toks(toks, Bb, Sb))
+        bank.jit_cache_keys.add(("edge", self.split, Bb, Sb))
+        payload, scales, cache0 = out
+        return (payload[:B, :S], scales[:B, :S],
+                bank._slice_cache(cache0, 0, self.split, B, S))
+
+    def cloud_half(self, params, payload, scales):
+        """Cloud stage: restore + layers [split, N) + LM head.  Returns
+        (last-position logits (B, V), cache1)."""
+        import jax.numpy as jnp
+        bank = self.bank
+        payload = jnp.asarray(payload)
+        B, S = payload.shape[:2]
+        Bb, Sb = bank._buckets(B, S)
+        if (Bb, Sb) != (B, S):
+            pad = ((0, Bb - B), (0, Sb - S), (0, 0))
+            payload = jnp.pad(payload, pad)
+            scales = jnp.pad(jnp.asarray(scales), pad)
+        logits, cache1 = bank._fn("cloud", self.split)(
+            params, payload, scales, jnp.int32(S))
+        bank.jit_cache_keys.add(("cloud", self.split, Bb, Sb))
+        return logits[:B], bank._slice_cache(cache1, 1, self.split, B, S)
+
+    # ------------------------------------------------------------- engine glue
+    def _engine_prefill(self, params, toks):
+        import jax.numpy as jnp
+        bank = self.bank
+        toks = jnp.asarray(toks)
+        B, S = toks.shape
+        Bb, Sb = bank._buckets(B, S)
+        logits, caches = bank._fn("prefill", self.split)(
+            params, bank._pad_toks(toks, Bb, Sb), jnp.int32(S))
+        bank.jit_cache_keys.add(("prefill", self.split, Bb, Sb))
+        return logits[:B], [bank._slice_cache(caches[0], 0, self.split, B, S),
+                            bank._slice_cache(caches[1], 1, self.split, B, S)]
+
+    def make_engine(self, *, max_batch: int, max_len: int, seed: int = 0):
+        from repro.serving.engine import ServingEngine
+        return ServingEngine(self.params, self.built, max_batch=max_batch,
+                             max_len=max_len, seed=seed,
+                             stages=self.bank.engine_stages(self.split),
+                             prefill_fn=self._engine_prefill,
+                             decode_fn=self.bank._fn("decode", self.split))
+
+    # --------------------------------------------------------------- reference
+    def reference_prefill(self, toks):
+        """Single-mesh forward (what the split path must reproduce): eager,
+        reference (non-kernel) wire codec, same wire_mode semantics."""
+        import jax.numpy as jnp
+        bank = self.bank
+        cfg, segs, scale, embed, rms_norm, unembed, LOCAL = bank._stage_ctx()
+        tfm = bank._tfm
+        params = self.params
+        x = embed(params["embed"], jnp.asarray(toks), scale=scale)
+        x, cache0, _ = tfm.apply_layer_range(
+            segs, params["stages"][0], x, 0, self.split, cfg=cfg, pctx=LOCAL,
+            mode="prefill", range_cache=None, pos=None,
+            shared_params=params.get("shared_attn"))
+        x = bank._wire_ingraph(params["butterfly"], x, use_kernel=False)
+        x, cache1, _ = tfm.apply_layer_range(
+            segs, params["stages"][0], x, self.split, cfg.num_layers, cfg=cfg,
+            pctx=LOCAL, mode="prefill", range_cache=None, pos=None,
+            shared_params=params.get("shared_attn"))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        return unembed(table, x, cfg.logit_softcap), [cache0, cache1]

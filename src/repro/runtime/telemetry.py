@@ -106,6 +106,10 @@ class Telemetry:
     def __init__(self):
         self.traces: List[RequestTrace] = []
         self.decisions: List[ControlDecision] = []
+        # free-form runtime counters (numerics batch sizes, decode steps,
+        # compile-cache entries ...) — populated by the actors/simulator
+        from collections import defaultdict
+        self.counters: Dict[str, float] = defaultdict(float)
 
     def record(self, trace: RequestTrace) -> None:
         self.traces.append(trace)
@@ -165,6 +169,7 @@ class Telemetry:
     def to_json(self) -> str:
         return json.dumps({
             "summary": self.summary(),
+            "counters": dict(self.counters),
             "decisions": self.split_trajectory(),
             "traces": [dict(asdict(t), **{k: round(v, 9) for k, v in
                                           t.breakdown().items()})

@@ -3,14 +3,23 @@ slot-based KV/state cache pool.
 
 Real-engine behaviours kept: per-request positions (ragged decode), slot
 reuse on completion, greedy or temperature sampling, max-token and EOS
-stopping.  Kept honest-but-small: requests prefill one at a time (the
-pipeline/pod path in serving/pipeline.py is the paper's split deployment;
-this engine is the single-mesh baseline the paper calls "cloud-only" or
-"mobile-only" depending on where it runs).
+stopping.  The decode hot path is one jitted step per batch: sampling
+(greedy argmax + temperature categorical) runs *inside* the jitted graph,
+so ``step()`` costs a single host sync for the whole slot pool instead of a
+per-slot ``device_get`` + Python argmax; per-step logits snapshots are
+opt-in (``record_logits``).  Slot admission writes the cache pool through
+one jitted donated update instead of an eager per-leaf dispatch.
+
+The engine's forward functions are pluggable: the split runtime's
+``SplitModelBank`` supplies jitted prefill/decode closures over the shared
+backbone (one compile per split, shared by every engine of that split);
+stand-alone engines default to the single-mesh ``models.model`` forwards.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import weakref
 from typing import Callable, List, Optional
 
 import jax
@@ -29,15 +38,75 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    record_logits: bool = False         # keep per-step logits (host copies)
     # filled by the engine
     generated: list = dataclasses.field(default_factory=list)
     logits_history: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _write_slot_jit(pool, new, slot):
+    """Copy a single-request cache into batch slot ``slot`` of the pool in
+    one compiled dispatch; seq axes of attention caches pad to the pool's
+    max_len/window.  The pool buffers are donated so admission updates in
+    place where the backend allows."""
+    def copy(pool_leaf, new_leaf):
+        pad = [(0, 0)] * new_leaf.ndim
+        changed = False
+        for ax in range(2, new_leaf.ndim):
+            if new_leaf.shape[ax] < pool_leaf.shape[ax]:
+                pad[ax] = (0, pool_leaf.shape[ax] - new_leaf.shape[ax])
+                changed = True
+        if changed:
+            new_leaf = jnp.pad(new_leaf, pad)
+        start = (0, slot) + (0,) * (new_leaf.ndim - 2)
+        return jax.lax.dynamic_update_slice(
+            pool_leaf, new_leaf.astype(pool_leaf.dtype), start)
+
+    return jax.tree.map(copy, pool, new)
+
+
+# decode_fn -> jitted (decode + in-graph sampling) step, shared by every
+# engine using the same decode closure (e.g. all engines of one bank split)
+_STEP_FNS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _sampled_step(decode_fn):
+    try:
+        return _STEP_FNS[decode_fn]
+    except KeyError:
+        pass
+
+    # the closure must NOT strongly reference decode_fn: the cached value
+    # would then keep its own weak key alive and the entry would be
+    # immortal, pinning engines/banks (params + cache pools) forever.  The
+    # caller holds decode_fn for the engine's lifetime, so the deref only
+    # fails after every user of this entry is already gone.
+    ref = weakref.ref(decode_fn)
+
+    def step(params, tokens, caches, pos, key, temps):
+        logits, caches = ref()(params, tokens, caches, pos)
+        row = logits[:, 0].astype(jnp.float32)             # (B, V)
+        greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, row.shape[0])
+        safe_t = jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.vmap(jax.random.categorical)(keys, row / safe_t)
+        toks = jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+        return toks, row, caches, key
+
+    jitted = jax.jit(step)
+    _STEP_FNS[decode_fn] = jitted
+    return jitted
+
+
 class ServingEngine:
     def __init__(self, params, built: M.BuiltModel, *, max_batch: int = 8,
-                 max_len: int = 512, pctx: ParallelContext = LOCAL, seed: int = 0):
+                 max_len: int = 512, pctx: ParallelContext = LOCAL,
+                 seed: int = 0, stages=None,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None):
         self.params = params
         self.built = built
         self.cfg = built.cfg
@@ -45,21 +114,31 @@ class ServingEngine:
         self.max_len = max_len
         self.pctx = pctx
         dt = jnp.dtype(self.cfg.dtype)
+        stage_segs = stages if stages is not None else \
+            [list(segs) for segs in built.stages]
         self.cache = [tfm.init_stage_cache(list(segs), self.cfg, max_batch,
                                            max_len, dt)
-                      for segs in built.stages]
+                      for segs in stage_segs]
         self.positions = np.zeros((max_batch,), np.int32)   # next write pos
         self.active: List[Optional[Request]] = [None] * max_batch
         self.key = jax.random.key(seed)
-        self._decode = jax.jit(self._decode_fn)
+        self._prefill = prefill_fn or self._default_prefill
+        # hold a strong ref to the decode closure: _STEP_FNS is weak-keyed,
+        # so the shared jitted step lives exactly as long as its decode fn
+        self._decode = decode_fn or self._decode_fn
+        self._step = _sampled_step(self._decode)
+        self._last = np.zeros((max_batch, 1), np.int32)     # last token/slot
+        self._temps = np.zeros((max_batch,), np.float32)
         self._uid = 0
+        self.decode_steps = 0
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               record_logits: bool = False) -> Request:
         req = Request(self._uid, np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      eos_id=eos_id)
+                      eos_id=eos_id, record_logits=record_logits)
         self._uid += 1
         slot = self._free_slot()
         self._prefill_into(slot, req)
@@ -67,7 +146,8 @@ class ServingEngine:
 
     def submit_prefilled(self, prompt_len: int, caches, last_logits,
                          max_new_tokens: int = 32, temperature: float = 0.0,
-                         eos_id: Optional[int] = None) -> Request:
+                         eos_id: Optional[int] = None,
+                         record_logits: bool = False) -> Request:
         """Admit a request whose prefill ran elsewhere (the split runtime's
         edge/cloud halves): inject its per-stage caches into a free slot and
         sample the first token from the externally computed last-position
@@ -76,29 +156,30 @@ class ServingEngine:
         assert prompt_len < self.max_len, "prompt exceeds cache"
         req = Request(self._uid, np.zeros((prompt_len,), np.int32),
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      eos_id=eos_id)
+                      eos_id=eos_id, record_logits=record_logits)
         self._uid += 1
         slot = self._free_slot()
         self._write_slot(slot, caches)
         self.positions[slot] = prompt_len
         self.active[slot] = req
         last_logits = jnp.asarray(last_logits)
-        req.logits_history.append(jax.device_get(last_logits))
-        tok = self._sample(last_logits, req)
-        req.generated.append(tok)
-        if (req.eos_id is not None and tok == req.eos_id) or \
-                req.max_new_tokens <= 1:
-            req.done = True
-            self.active[slot] = None
+        if req.record_logits:
+            req.logits_history.append(jax.device_get(last_logits))
+        self._emit(slot, req, self._sample(last_logits, req))
         return req
 
     @property
     def num_active(self) -> int:
         return sum(1 for r in self.active if r is not None)
 
-    def run(self, requests_done: Callable[[], bool] = None, max_steps: int = 10_000):
+    def run(self, requests_done: Optional[Callable[[], bool]] = None,
+            max_steps: int = 10_000):
+        """Decode until all slots drain, ``max_steps`` elapse, or the
+        ``requests_done`` predicate (checked between steps) fires."""
         steps = 0
         while any(r is not None for r in self.active) and steps < max_steps:
+            if requests_done is not None and requests_done():
+                break
             self.step()
             steps += 1
 
@@ -109,41 +190,33 @@ class ServingEngine:
                 return i
         raise RuntimeError("engine full; drain before submitting")
 
+    def _default_prefill(self, params, toks):
+        batch = {"tokens": jnp.asarray(toks)}
+        return M.forward_prefill(params, self.built, batch, self.pctx)
+
     def _prefill_into(self, slot: int, req: Request):
         S = len(req.prompt)
         assert S < self.max_len, "prompt exceeds cache"
-        batch = {"tokens": jnp.asarray(req.prompt[None])}
-        logits, caches = M.forward_prefill(self.params, self.built, batch,
-                                           self.pctx)
+        logits, caches = self._prefill(self.params, req.prompt[None])
         self._write_slot(slot, caches)
         self.positions[slot] = S
         self.active[slot] = req
-        req.logits_history.append(jax.device_get(logits[0, -1]))
-        tok = self._sample(logits[0, -1], req)
+        if req.record_logits:
+            req.logits_history.append(jax.device_get(logits[0, -1]))
+        self._emit(slot, req, self._sample(logits[0, -1], req))
+
+    def _emit(self, slot: int, req: Request, tok: int):
+        """Record a sampled first token and retire single-token requests."""
         req.generated.append(tok)
+        self._last[slot, 0] = tok
+        self._temps[slot] = req.temperature
         if (req.eos_id is not None and tok == req.eos_id) or \
                 req.max_new_tokens <= 1:
             req.done = True
             self.active[slot] = None
 
     def _write_slot(self, slot: int, req_cache):
-        """Copy a single-request cache into batch slot ``slot`` of the pool,
-        padding the seq axis of attention caches up to max_len/window."""
-        def copy(pool, new):
-            # leaves: stacked (repeats, B, ...) pools vs (repeats, 1, ...) new
-            pad = [(0, 0)] * new.ndim
-            changed = False
-            for ax in range(2, new.ndim):
-                if new.shape[ax] < pool.shape[ax]:
-                    pad[ax] = (0, pool.shape[ax] - new.shape[ax])
-                    changed = True
-            if changed:
-                new = jnp.pad(new, pad)
-            start = [0, slot] + [0] * (new.ndim - 2)
-            return jax.lax.dynamic_update_slice(pool, new.astype(pool.dtype),
-                                                tuple(start))
-
-        self.cache = jax.tree.map(copy, self.cache, req_cache)
+        self.cache = _write_slot_jit(self.cache, req_cache, jnp.int32(slot))
 
     def _decode_fn(self, params, tokens, caches, pos):
         return M.forward_decode(params, self.built, tokens, caches, pos,
@@ -156,26 +229,32 @@ class ServingEngine:
         return int(jax.random.categorical(sub, logits / req.temperature))
 
     def step(self):
-        """One batched decode step over all active slots."""
+        """One batched decode step over all active slots: a single jitted
+        dispatch (forward + sampling) and a single host sync for the
+        sampled tokens."""
         if not any(r is not None for r in self.active):
             return
-        last = np.zeros((self.max_batch, 1), np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None and r.generated:
-                last[i, 0] = r.generated[-1]
         # .copy() is load-bearing: on the CPU backend jnp.asarray can alias
         # the numpy buffer zero-copy, and the in-place `positions[i] += 1`
         # below would race with the still-dispatching decode (observed as a
         # rare wrong-slot cache write under load)
         pos = jnp.asarray(self.positions.copy())
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache, pos)
+        toks, logits, self.cache, self.key = self._step(
+            self.params, jnp.asarray(self._last.copy()), self.cache, pos,
+            self.key, jnp.asarray(self._temps.copy()))
+        toks_host = np.asarray(jax.device_get(toks))       # the one host sync
+        logits_host = None
+        self.decode_steps += 1
         for i, r in enumerate(self.active):
             if r is None:
                 continue
             self.positions[i] += 1
-            tok = self._sample(logits[i, 0], r)
-            r.logits_history.append(jax.device_get(logits[i, 0]))
+            tok = int(toks_host[i])
+            self._last[i, 0] = tok
+            if r.record_logits:
+                if logits_host is None:     # already computed; copy-only
+                    logits_host = np.asarray(jax.device_get(logits))
+                r.logits_history.append(logits_host[i])
             r.generated.append(tok)
             if (r.eos_id is not None and tok == r.eos_id) or \
                     len(r.generated) >= r.max_new_tokens or \

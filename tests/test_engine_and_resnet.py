@@ -32,14 +32,15 @@ def test_engine_matches_sequential_greedy():
 
     def solo(prompt):
         eng = ServingEngine(params, built, max_batch=1, max_len=64)
-        r = eng.submit(prompt, max_new_tokens=6)
+        r = eng.submit(prompt, max_new_tokens=6, record_logits=True)
         eng.run()
         return r
 
     expected = [solo(p) for p in prompts]
 
     eng = ServingEngine(params, built, max_batch=4, max_len=64)
-    reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    reqs = [eng.submit(p, max_new_tokens=6, record_logits=True)
+            for p in prompts]
     eng.run()
     for r, e in zip(reqs, expected):
         for step, (tb, ts) in enumerate(zip(r.generated, e.generated)):
@@ -64,6 +65,36 @@ def test_engine_slot_reuse():
     r3 = eng.submit(np.arange(6), max_new_tokens=3)   # reuses a freed slot
     eng.run()
     assert r3.done and len(r3.generated) == 3
+
+
+def test_engine_step_single_host_sync(monkeypatch):
+    """Sampling runs inside the jitted decode: one device_get per step for
+    the whole slot pool, none per slot (logits snapshots are opt-in)."""
+    cfg = get_config("qwen3-8b").reduced()
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    eng = ServingEngine(params, built, max_batch=4, max_len=64)
+    for p in (np.arange(4, 10), np.arange(30, 37), np.arange(100, 103)):
+        eng.submit(p, max_new_tokens=4)
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    eng.step()
+    assert len(calls) == 1
+    assert all(not r.logits_history for r in eng.active if r is not None)
+
+
+def test_engine_run_honors_requests_done():
+    cfg = get_config("qwen3-8b").reduced()
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    eng = ServingEngine(params, built, max_batch=2, max_len=64)
+    r = eng.submit(np.arange(5), max_new_tokens=16)
+    eng.run(requests_done=lambda: len(r.generated) >= 3)
+    assert not r.done and len(r.generated) == 3     # early exit, slot kept
+    eng.run()                                       # and it can finish later
+    assert r.done and len(r.generated) == 16
 
 
 # ---------------------------------------------------------------- resnet

@@ -248,6 +248,129 @@ def test_e2e_split_prefill_matches_reference(numerics_sim):
         assert req.engine_req.generated[0] == int(jnp.argmax(ref[0, -1]))
 
 
+def test_bank_holds_one_backbone_param_copy():
+    """Materializing every candidate split must not copy the backbone: each
+    runner's param dict shares the bank's leaves by identity, and the unique
+    parameter bytes across all runners stay within the tiny per-split
+    butterfly overhead of a single model's footprint."""
+    import jax
+    from repro.runtime.split_exec import SplitModelBank
+
+    bank = SplitModelBank(small_cfg(layers=4), 16, seed=0)
+    runners = [bank.runner(s) for s in bank.candidates]
+    assert len(runners) == 3
+
+    backbone_ids = {id(l) for l in jax.tree.leaves(bank.params)}
+    backbone_bytes = sum(l.nbytes for l in jax.tree.leaves(bank.params))
+    seen, total = set(), 0
+    for r in runners:
+        # the stages/embed/norm subtrees ARE the bank's objects, not copies
+        assert r.params["stages"] is bank.params["stages"]
+        assert r.params["embed"] is bank.params["embed"]
+        for leaf in jax.tree.leaves(r.params):
+            if id(leaf) not in seen:
+                seen.add(id(leaf))
+                total += leaf.nbytes
+    butterfly_bytes = total - backbone_bytes
+    assert backbone_ids <= seen
+    # 3 splits x (d*d_r + d_r*d) f32 — well under 10% of one backbone
+    assert butterfly_bytes < 0.1 * backbone_bytes
+    d = bank.base_cfg.d_model
+    assert butterfly_bytes == 3 * 2 * d * 16 * 4
+
+
+def test_cache_injection_parity_all_wire_modes():
+    """Edge half -> wire -> cloud half -> submit_prefilled must reproduce
+    the single-mesh reference forward (logits) and the engine's own
+    full-prefill decode (tokens) for every wire mode."""
+    import jax.numpy as jnp
+    from repro.runtime.split_exec import SplitModelBank
+
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 512, size=(1, 16)).astype(np.int32)
+    for wm in ("raw", "reduced", "int8"):
+        bank = SplitModelBank(small_cfg(layers=2), 16, wire_mode=wm, seed=0)
+        r = bank.runner(1)
+        payload, scales, c0 = r.edge_half(r.params, toks)
+        logits, c1 = r.cloud_half(r.params, payload, scales)
+        ref, _ = r.reference_prefill(toks)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref[:, -1]),
+                                   rtol=1e-4, atol=1e-4, err_msg=wm)
+        # inject the handed-off caches and decode greedily ...
+        eng = r.make_engine(max_batch=2, max_len=24, seed=0)
+        inj = eng.submit_prefilled(16, [c0, c1], logits[0], max_new_tokens=4)
+        eng.run()
+        # ... and compare against the same engine prefilling from scratch
+        ref_req = eng.submit(toks[0], max_new_tokens=4)
+        eng.run()
+        assert inj.generated[0] == int(jnp.argmax(ref[0, -1])), wm
+        assert inj.generated == ref_req.generated, wm
+
+
+def test_bank_unaligned_boundary_peels_units():
+    """xLSTM alternates mlstm/slstm in 2-layer repeat units, so odd splits
+    land inside a unit: the range view must peel only the unaligned edges
+    (keeping the stacked middle) and still match the reference forward.
+    Recurrent state also disables seq bucketing — shapes stay exact."""
+    from repro.models.transformer import range_segments
+    from repro.runtime.split_exec import SplitModelBank
+
+    cfg = dataclasses.replace(get_config("xlstm-125m").reduced(),
+                              num_layers=4)
+    bank = SplitModelBank(cfg, 16, seed=0)
+    assert not bank._seq_bucket_ok
+    segs = list(bank.built.stages[0])
+    assert [(len(s.unit), s.repeats) for s in segs] == [(2, 2)]
+    # split 1: peel layer 0 | peel layer 1 + slice repeats [1, 2)
+    assert [(len(s.unit), s.repeats)
+            for s in range_segments(segs, 0, 1)] == [(1, 1)]
+    assert [(len(s.unit), s.repeats)
+            for s in range_segments(segs, 1, 4)] == [(1, 1), (2, 1)]
+
+    toks = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, size=(1, 12)).astype(np.int32)
+    for split in bank.candidates:
+        r = bank.runner(split)
+        payload, scales, c0 = r.edge_half(r.params, toks)
+        logits, c1 = r.cloud_half(r.params, payload, scales)
+        ref, _ = r.reference_prefill(toks)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref[:, -1]),
+                                   rtol=1e-4, atol=1e-4, err_msg=str(split))
+
+
+def test_submit_prefilled_boundary_prompt_len():
+    """prompt_len == max_len - 1 is admissible: the first decode step writes
+    the cache's last row, then the position guard retires the request."""
+    from repro.runtime.split_exec import SplitModelBank
+
+    bank = SplitModelBank(small_cfg(layers=2), 16, seed=0)
+    r = bank.runner(1)
+    toks = np.arange(16, dtype=np.int32)[None]
+    payload, scales, c0 = r.edge_half(r.params, toks)
+    logits, c1 = r.cloud_half(r.params, payload, scales)
+    eng = r.make_engine(max_batch=1, max_len=17, seed=0)   # prompt_len + 1
+    req = eng.submit_prefilled(16, [c0, c1], logits[0], max_new_tokens=8)
+    eng.run()
+    assert req.done
+    assert len(req.generated) == 2          # first token + one decode step
+    with pytest.raises(AssertionError):
+        eng.submit_prefilled(17, [c0, c1], logits[0])      # == max_len
+
+
+def test_engines_share_compiled_decode_step(numerics_sim):
+    """Every engine of one bank split reuses the same jitted decode+sample
+    step (the bank's compile cache, not a per-engine jit)."""
+    sim, tel = numerics_sim
+    r = sim.bank.runner(1)
+    e1 = r.make_engine(max_batch=2, max_len=32)
+    e2 = r.make_engine(max_batch=4, max_len=32)
+    assert e1._step is e2._step
+    assert tel.counters["engine_decode_steps"] > 0
+    assert tel.counters["bank_jit_cache_entries"] > 0
+
+
 def test_e2e_decode_runs_and_traces_close(numerics_sim):
     sim, tel = numerics_sim
     assert len(tel.traces) == 4
