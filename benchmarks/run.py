@@ -8,6 +8,7 @@
 #               reproduction of the paper's chosen splits + improvements
 #   sec3d       compression ratios (butterfly vs raw features)
 #   wire        beyond-paper: pod-boundary wire bytes per arch
+#   transport   decode-transport smoke: streamed vs cache-handoff parity
 #   roofline    aggregated dry-run roofline table (reads experiments/dryrun)
 #   micro       kernel/system microbenchmarks (us/call)
 #
@@ -297,14 +298,17 @@ def bench_bank():
 
 def bench_runtime():
     """Split-serving runtime: cloud-only (raw upload) vs the butterfly split
-    under identical Poisson traffic, plus the adaptive controller's split
-    trajectory under a cloud-load ramp.  Emits one JSON document
-    (runtime/json row) with the full comparison."""
+    under identical Poisson traffic, a streamed vs cache-handoff decode
+    transport comparison on a long-prompt/multi-token workload (both runs on
+    the SAME arrival trace via the shared builder), plus the adaptive
+    controller's split trajectory under a cloud-load ramp.  Emits one JSON
+    document (runtime/json row) with the full comparison."""
     import dataclasses
 
     from repro.configs import get_config
     from repro.core.profiler import JETSON_TX2
-    from repro.runtime.simulator import SimConfig, Simulation, ramp_load
+    from repro.runtime.simulator import (SimConfig, Simulation,
+                                         poisson_arrivals, ramp_load)
 
     cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), num_layers=4)
     base = SimConfig(cfg=cfg, network="3g", num_devices=4, num_requests=32,
@@ -336,6 +340,37 @@ def bench_runtime():
               f"{row['split_int8']['latency_p50_ms']:.2f}ms "
               f"cloud_p50={row['cloud_only']['latency_p50_ms']:.2f}ms "
               f"speedup={row['split_speedup_vs_cloud']:.1f}x")
+    # decode transports head to head: long prompt + multi-token generation
+    # on 3g, identical arrival trace (the shared Poisson builder) — cache
+    # handoff pays prompt-proportional KV bytes up front, streamed pays one
+    # (1, d_r) row + one id RTT per token
+    tr_prompt, tr_tokens = 128, 8
+    arrivals = poisson_arrivals(num_devices=4, num_requests=24,
+                                arrival_rate=20.0, prompt_len=tr_prompt,
+                                seed=0)
+    tr = {"workload": {"prompt_len": tr_prompt, "max_new_tokens": tr_tokens,
+                       "network": "3g", "requests": 24}}
+    for tp in ("cache_handoff", "streamed"):
+        sc = dataclasses.replace(base, network="3g", mode="split",
+                                 wire_mode="int8", transport=tp,
+                                 num_requests=24, prompt_len=tr_prompt,
+                                 max_new_tokens=tr_tokens, arrivals=arrivals)
+        s = Simulation(sc).run().summary()
+        tr[tp] = {"latency_p50_ms": round(s["latency_p50_ms"], 3),
+                  "ttft_p50_ms": round(s["ttft_p50_ms"], 3),
+                  "mean_uplink_kb": round(s["mean_wire_kb"], 3),
+                  "mean_downlink_b": round(s["mean_downlink_b"], 3),
+                  "mean_stream_rtt_ms": round(s["mean_stream_rtt_ms"], 4)}
+    tr["streamed_uplink_reduction"] = round(
+        tr["cache_handoff"]["mean_uplink_kb"] /
+        tr["streamed"]["mean_uplink_kb"], 2)
+    result["transports"] = tr
+    print(f"runtime/transports,0,uplink handoff="
+          f"{tr['cache_handoff']['mean_uplink_kb']:.2f}kB streamed="
+          f"{tr['streamed']['mean_uplink_kb']:.2f}kB "
+          f"({tr['streamed_uplink_reduction']:.1f}x less) p50 handoff="
+          f"{tr['cache_handoff']['latency_p50_ms']:.2f}ms streamed="
+          f"{tr['streamed']['latency_p50_ms']:.2f}ms")
     # adaptive split under a load ramp: cloud starts 10x the edge, external
     # tenants ramp to 97% — the controller must push the split deeper as the
     # derated cloud drops below edge speed (load > 0.9)
@@ -361,6 +396,57 @@ def bench_runtime():
     _append_runtime_artifact(result)
 
 
+def bench_transport():
+    """Decode-transport smoke (CI): tiny 2-layer config with real numerics,
+    both transports on the identical arrival trace — greedy token streams
+    must match each other and the hosted single-mesh reference exactly, the
+    downlink must carry the sampled ids, and streamed uplink bytes must
+    undercut the cache handoff.  Raises on any violation."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.runtime.simulator import SimConfig, Simulation, poisson_arrivals
+
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), num_layers=2)
+    arrivals = poisson_arrivals(num_devices=2, num_requests=4,
+                                arrival_rate=20.0, prompt_len=16,
+                                vocab_size=cfg.vocab_size, seed=0)
+    t0 = time.perf_counter()
+    streams, sims, summaries = {}, {}, {}
+    for tp in ("cache_handoff", "streamed"):
+        sc = SimConfig(cfg=cfg, mode="split", wire_mode="int8", network="3g",
+                       num_devices=2, num_requests=4, arrival_rate=20.0,
+                       prompt_len=16, max_new_tokens=3, d_r=16, numerics=True,
+                       max_concurrent=2, transport=tp, seed=0,
+                       arrivals=arrivals)
+        sim = Simulation(sc)
+        tel = sim.run()
+        sims[tp], summaries[tp] = sim, tel.summary()
+        streams[tp] = {r.uid: list(r.engine_req.generated)
+                       for r in sim.requests}
+        assert summaries[tp]["total_downlink_kb"] > 0, \
+            f"{tp}: downlink carried no sampled ids"
+    assert streams["cache_handoff"] == streams["streamed"], \
+        "transport parity violated: greedy streams differ"
+    runner = sims["streamed"].bank.runner(1)
+    eng = runner.make_engine(max_batch=2, max_len=24, seed=0)
+    for req in sims["streamed"].requests:
+        ref = eng.submit(req.tokens, max_new_tokens=3)
+        eng.run()
+        assert list(ref.generated) == streams["streamed"][req.uid], \
+            f"uid {req.uid}: streamed != single-mesh reference"
+    up_h = summaries["cache_handoff"]["mean_wire_kb"]
+    up_s = summaries["streamed"]["mean_wire_kb"]
+    assert up_s < up_h, "streamed did not reduce uplink bytes"
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"transport/parity,{us/2:.0f},greedy_streams_match=3way "
+          f"uplink handoff={up_h:.2f}kB streamed={up_s:.2f}kB")
+    print(f"transport/downlink,0,"
+          f"handoff={summaries['cache_handoff']['total_downlink_kb']*1e3:.0f}B "
+          f"streamed={summaries['streamed']['total_downlink_kb']*1e3:.0f}B "
+          f"rtt={summaries['streamed']['mean_stream_rtt_ms']:.2f}ms")
+
+
 def _append_runtime_artifact(result: dict) -> None:
     """Append this run's runtime JSON to experiments/BENCH_runtime.json via
     the one writer in experiments/aggregate.py (which also renders it)."""
@@ -374,6 +460,7 @@ BENCHES = {
     "fig7": bench_fig7,
     "bank": bench_bank,
     "runtime": bench_runtime,
+    "transport": bench_transport,
     "wirebits": bench_wirebits,
     "table4": bench_table4,
     "table5": bench_table5,

@@ -97,6 +97,26 @@ def print_runtime(path: str = RUNTIME_JSON):
               f"| {row['split_speedup_vs_cloud']:.1f}x "
               f"| {row['split_int8']['mean_wire_kb']:.2f}kB "
               f"| {row['cloud_only']['mean_wire_kb']:.2f}kB |")
+    tr = last.get("transports", {})
+    if tr:
+        w = tr.get("workload", {})
+        print(f"\n#### Decode transports (S={w.get('prompt_len', '?')}, "
+              f"T={w.get('max_new_tokens', '?')}, "
+              f"{w.get('network', '?')}, identical arrival trace)\n")
+        print("| transport | uplink/req | downlink/req | ttft p50 | p50 |")
+        print("|---|---|---|---|---|")
+        for tp in ("cache_handoff", "streamed"):
+            row = tr.get(tp)
+            if row is None:
+                continue
+            print(f"| {tp} | {row['mean_uplink_kb']:.2f}kB "
+                  f"| {row['mean_downlink_b']:.0f}B "
+                  f"| {row['ttft_p50_ms']:.2f}ms "
+                  f"| {row['latency_p50_ms']:.2f}ms |")
+        red = tr.get("streamed_uplink_reduction")
+        if red is not None:
+            print(f"\nstreamed ships {red}x fewer uplink bytes than the "
+                  f"stage-0 cache handoff on this workload")
     ad = last.get("adaptive", {})
     if ad:
         print(f"\nadaptive: split {ad.get('split_at_low_load')} -> "

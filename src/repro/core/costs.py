@@ -154,6 +154,54 @@ def model_flops_decode(cfg: ModelConfig, batch: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# per-token split-decode accounting (the streamed decode transport)
+# ---------------------------------------------------------------------------
+
+# sampled token ids travel the downlink as int32
+TOKEN_BYTES = 4.0
+
+
+def layer_param_count(cfg: ModelConfig, active_only: bool = True) -> float:
+    """Params in the layer stack only (embedding/head tables excluded)."""
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return param_count(cfg, active_only) - emb
+
+
+def _act_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def full_decode_step_cost(cfg: ModelConfig, batch: int = 1):
+    """(flops, weight_bytes) for one full-model decode step (weight-bound:
+    every step streams the whole parameter set) — the cost of a cloud-side
+    cache-handoff decode turn, used by both the runtime CostModel and the
+    planner so the selection phase scores what the simulator charges."""
+    return model_flops_decode(cfg, batch), param_count(cfg) * _act_bytes(cfg)
+
+
+def edge_decode_step_cost(cfg: ModelConfig, split: int, d_r: int):
+    """(flops, weight_bytes) per generated token for the edge's streamed
+    half: embed lookup + layers [0, split) + the reduction unit.  Decode is
+    weight-bound, so bytes stream the edge layers' parameter share."""
+    ab = _act_bytes(cfg)
+    lp = layer_param_count(cfg) * split / cfg.num_layers
+    flops = 2.0 * lp + 2.0 * cfg.d_model * d_r
+    nbytes = lp * ab + cfg.d_model * ab            # one embedding row
+    return flops, nbytes
+
+
+def cloud_decode_step_cost(cfg: ModelConfig, split: int, d_r: int,
+                           batch: int = 1):
+    """(flops, weight_bytes) per decode turn for the cloud's streamed half:
+    restoration unit + layers [split, N) + the unembed matmul."""
+    ab = _act_bytes(cfg)
+    lp = layer_param_count(cfg) * (cfg.num_layers - split) / cfg.num_layers
+    flops = batch * (2.0 * lp + 2.0 * d_r * cfg.d_model + embed_flops(cfg, 1))
+    nbytes = lp * ab + cfg.vocab_size * cfg.d_model * ab
+    return flops, nbytes
+
+
+# ---------------------------------------------------------------------------
 # resnet accounting (paper's arch)
 # ---------------------------------------------------------------------------
 

@@ -206,21 +206,40 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                         edge_load: float = 0.0, wire_mode: str = "int8",
                         link_energy_mj_per_byte: float = 0.0,
                         handoff_bytes_per_layer: float = 0.0,
-                        objective: str = "latency"):
+                        objective: str = "latency",
+                        transports: Sequence[str] = ("cache_handoff",),
+                        new_tokens: int = 1,
+                        downlink_bytes_per_s: Optional[float] = None,
+                        downlink_energy_mj_per_byte: float = 0.0):
     """One online iteration of Algorithm 1's selection phase.
 
     Unlike :func:`plan_transformer_split` this takes the *measured* state the
     runtime's controller observes — effective uplink throughput (nominal
     bandwidth derated by contention) and current server load — and scores
-    every hosted partition point against it.  ``handoff_bytes_per_layer``
-    charges split-proportional extra wire (the runtime's stage-0 KV-cache
-    handoff for multi-token requests).  Returns ``(best_row, rows)`` with
-    the same row schema as the offline planner."""
+    every hosted partition point against it.  When ``transports`` names more
+    than one decode transport, every (split, transport) pair is scored, so
+    the controller picks the transport alongside the split:
+
+    * ``cache_handoff`` pays ``handoff_bytes_per_layer`` split-proportional
+      extra uplink (the stage-0 KV handoff for multi-token requests), then
+      decodes cloud-side and ships all ``new_tokens`` sampled ids down once.
+    * ``streamed`` ships only the prefill codes, then pays one wire row up,
+      one cloud turn and one id down per generated token — an RTT x tokens
+      term against the observed link rates, with uplink bytes flat in the
+      prompt length.
+
+    Returns ``(best_row, rows)``; rows carry a ``transport`` field on top of
+    the offline planner's schema."""
     from repro.core import costs
 
     assert objective in ("latency", "energy")
     n = cfg.num_layers
+    T = max(int(new_tokens), 1)
     base_wire = wire_mode_bytes(cfg, seq, d_r, wire_mode)
+    row_bytes = wire_mode_bytes(cfg, 1, d_r, wire_mode)
+    down_bps = downlink_bytes_per_s if downlink_bytes_per_s else float("inf")
+    token_down_s = costs.TOKEN_BYTES / down_bps
+    link_bps = max(link_bytes_per_s, 1e-9)
     rows = []
     for j in candidate_splits:
         assert 0 < j < n, f"split {j} out of range for {n} layers"
@@ -233,15 +252,41 @@ def select_split_online(cfg, seq: int, d_r: int, *,
         cb = cf / max(cfg.d_model, 1)
         t_edge = edge.latency_s(ef, eb) / max(1e-9, 1 - edge_load)
         t_cloud = cloud.latency_s(cf, cb) / max(1e-9, 1 - cloud_load)
-        wire = base_wire + j * handoff_bytes_per_layer
-        t_up = wire / max(link_bytes_per_s, 1e-9)
-        rows.append({
-            "split": j, "d_r": d_r, "edge_s": t_edge, "uplink_s": t_up,
-            "cloud_s": t_cloud, "latency_s": t_edge + t_up + t_cloud,
-            "wire_bytes": wire,
-            "energy_mj": t_edge * edge.compute_power_w * 1e3 +
-                         wire * link_energy_mj_per_byte,
-        })
+        esf, esb = costs.edge_decode_step_cost(cfg, j, d_r)
+        csf, csb = costs.cloud_decode_step_cost(cfg, j, d_r)
+        t_edge_step = edge.latency_s(esf, esb) / max(1e-9, 1 - edge_load)
+        t_cloud_step = cloud.latency_s(csf, csb) / max(1e-9, 1 - cloud_load)
+        # a handoff decode turn runs the FULL hosted model cloud-side (the
+        # engine's fused edge+wire+cloud step) — split-invariant, and what
+        # the runtime's CostModel.decode_step_s actually charges
+        hf, hb = costs.full_decode_step_cost(cfg)
+        t_handoff_step = cloud.latency_s(hf, hb) / max(1e-9, 1 - cloud_load)
+        down_bytes = T * costs.TOKEN_BYTES
+        for tp in transports:
+            if tp == "cache_handoff":
+                wire = base_wire + j * handoff_bytes_per_layer
+                t_up = wire / link_bps
+                edge_total = t_edge
+                lat = t_edge + t_up + t_cloud + \
+                    (T - 1) * t_handoff_step + down_bytes / down_bps
+            elif tp == "streamed":
+                wire = base_wire + (T - 1) * row_bytes
+                t_up = base_wire / link_bps
+                rtt = t_edge_step + row_bytes / link_bps + t_cloud_step + \
+                    token_down_s
+                edge_total = t_edge + (T - 1) * t_edge_step
+                lat = t_edge + t_up + t_cloud + token_down_s + (T - 1) * rtt
+            else:
+                raise ValueError(f"unknown transport {tp!r}")
+            rows.append({
+                "split": j, "transport": tp, "d_r": d_r,
+                "edge_s": edge_total, "uplink_s": t_up,
+                "cloud_s": t_cloud, "latency_s": lat,
+                "wire_bytes": wire, "downlink_bytes": down_bytes,
+                "energy_mj": edge_total * edge.compute_power_w * 1e3 +
+                             wire * link_energy_mj_per_byte +
+                             down_bytes * downlink_energy_mj_per_byte,
+            })
     key = "latency_s" if objective == "latency" else "energy_mj"
     best = min(rows, key=lambda r: r[key])
     return best, rows

@@ -9,6 +9,8 @@ Examples:
   PYTHONPATH=src python -m repro.launch.runtime_sim --network 3g --devices 4 --requests 16
   PYTHONPATH=src python -m repro.launch.runtime_sim --mode cloud --network 3g
   PYTHONPATH=src python -m repro.launch.runtime_sim --wire-mode raw --no-numerics
+  PYTHONPATH=src python -m repro.launch.runtime_sim --transport streamed \\
+      --seq 128 --max-new-tokens 16 --no-numerics
   PYTHONPATH=src python -m repro.launch.runtime_sim --adapt --load-ramp 0:0,0.3:0.97 \\
       --requests 64 --rate 40 --max-new-tokens 1 --no-numerics
 """
@@ -51,8 +53,20 @@ def main():
                     default="split")
     ap.add_argument("--wire-mode", choices=("raw", "reduced", "int8"),
                     default="int8")
+    ap.add_argument("--transport",
+                    choices=("cache_handoff", "streamed", "auto"),
+                    default="cache_handoff",
+                    help="decode transport for multi-token split requests: "
+                         "cache_handoff ships the edge stage-0 KV cache up "
+                         "front; streamed keeps it on the edge and sends one "
+                         "int8 (1, d_r) row per generated token (DESIGN.md "
+                         "section 8.6); auto lets the adaptive controller "
+                         "pick per request (requires --adapt)")
     ap.add_argument("--network", default="3g",
                     choices=("3g", "4g", "wifi", "inter_pod"))
+    ap.add_argument("--duplex", choices=("split", "shared"), default="split",
+                    help="uplink/downlink FIFO contention: independent per "
+                         "direction (split) or one serial frontier (shared)")
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=20.0,
@@ -89,7 +103,8 @@ def main():
         else GTX_1080TI
     sim_cfg = SimConfig(
         cfg=cfg, mode=args.mode, wire_mode=args.wire_mode,
-        network=args.network, num_devices=args.devices,
+        transport=args.transport, network=args.network, duplex=args.duplex,
+        num_devices=args.devices,
         num_requests=args.requests, arrival_rate=args.rate,
         prompt_len=args.seq, max_new_tokens=args.max_new_tokens,
         d_r=args.d_r, initial_split=args.split,
@@ -103,9 +118,9 @@ def main():
     tel = sim.run()
 
     print(f"# {args.mode} serving, wire={args.wire_mode}, "
-          f"network={args.network}, {args.devices} devices, "
-          f"{args.requests} requests, arch={cfg.name} "
-          f"({cfg.num_layers} layers, d_r={args.d_r})")
+          f"transport={args.transport}, network={args.network}, "
+          f"{args.devices} devices, {args.requests} requests, "
+          f"arch={cfg.name} ({cfg.num_layers} layers, d_r={args.d_r})")
     print(tel.table())
     s = tel.summary()
     print(f"\nlatency  p50 {s['latency_p50_ms']:9.2f} ms   "
@@ -117,12 +132,20 @@ def main():
     print(f"uplink   busy {sim.uplink.stats.busy_s*1e3:.1f} ms, "
           f"contention wait {sim.uplink.stats.wait_s*1e3:.1f} ms over "
           f"{sim.uplink.stats.n_transfers} transfers")
+    print(f"downlink busy {sim.uplink.down_stats.busy_s*1e3:.1f} ms, "
+          f"contention wait {sim.uplink.down_stats.wait_s*1e3:.1f} ms over "
+          f"{sim.uplink.down_stats.n_transfers} transfers "
+          f"({sim.uplink.down_stats.bytes_sent:.0f} B of sampled ids)")
+    if s["mean_stream_rtt_ms"] > 0:
+        print(f"streamed decode: mean per-token RTT "
+              f"{s['mean_stream_rtt_ms']:.2f} ms "
+              f"(row up + cloud turn + id down)")
     if tel.decisions:
-        print("\ncontroller decisions (t, cloud_load, split):")
+        print("\ncontroller decisions (t, cloud_load, split, transport):")
         for d in tel.decisions:
             mark = " <-- moved" if d.new_split != d.old_split else ""
             print(f"  {d.t:7.3f}s  load={d.cloud_load:5.1%}  "
-                  f"split={d.new_split}{mark}")
+                  f"split={d.new_split}  {d.transport}{mark}")
     if args.json:
         with open(args.json, "w") as f:
             f.write(tel.to_json())

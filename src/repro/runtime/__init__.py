@@ -6,11 +6,12 @@ This package provides the missing request-stream layer on top of the repo's
 static pieces:
 
   clock.py       deterministic discrete-event loop (reproducible traces)
-  wire.py        contended uplink transport over core/wireless link models
+  wire.py        contended uplink + downlink over core/wireless link models
   telemetry.py   per-request latency/energy breakdown + p50/p95/p99
   split_exec.py  real jax numerics for the edge/cloud halves + cost model
+  transports.py  pluggable decode transports (cache handoff vs streamed rows)
   actors.py      edge-device fleet and the cloud continuous-batching server
-  controller.py  adaptive split control (online selection phase)
+  controller.py  adaptive split + transport control (online selection phase)
   simulator.py   ties the above into a runnable simulation
 
 Entry points: ``repro.launch.runtime_sim`` (CLI) and
@@ -18,9 +19,11 @@ Entry points: ``repro.launch.runtime_sim`` (CLI) and
 """
 from repro.runtime.clock import EventLoop
 from repro.runtime.controller import AdaptiveSplitController
-from repro.runtime.simulator import SimConfig, Simulation
+from repro.runtime.simulator import SimConfig, Simulation, poisson_arrivals
 from repro.runtime.telemetry import RequestTrace, Telemetry
-from repro.runtime.wire import Uplink
+from repro.runtime.transports import DecodeTransport, get_transport
+from repro.runtime.wire import Uplink, Wire
 
 __all__ = ["EventLoop", "AdaptiveSplitController", "SimConfig", "Simulation",
-           "RequestTrace", "Telemetry", "Uplink"]
+           "RequestTrace", "Telemetry", "Uplink", "Wire", "DecodeTransport",
+           "get_transport", "poisson_arrivals"]

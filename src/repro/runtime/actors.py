@@ -12,11 +12,18 @@ CloudServer is a serial accelerator running a continuous-batching loop over
 the hosted partitioned models (ServingEngines over one shared-weight
 ``SplitModelBank`` backbone): each service turn admits every pending
 prefill the slot pool can hold (serial cumulative durations — same virtual
-timeline as one-at-a-time admission) and then runs batched decode steps
-over all active slots, with service times derated by ``1/(1 - load)`` (the
+timeline as one-at-a-time admission), then serves any streamed decode rows
+that arrived over the wire, then runs batched decode steps over the active
+cache-handoff slots, with service times derated by ``1/(1 - load)`` (the
 paper's K_cloud congestion knob).  Cloud-half numerics batch the same way
 the edge does: the first ``_prefill_done`` of a burst computes restore +
 layers [split, N) for every in-flight payload of that split in one call.
+
+The decode phase of a multi-token split request follows its
+:mod:`~repro.runtime.transports` transport — ``cache_handoff`` (stage-0
+cache up, decode in the engine's slot pool, ids down at completion) or
+``streamed`` (edge keeps its cache, one butterfly row up and one id down
+per token); both end with the response crossing the Wire's downlink.
 """
 from __future__ import annotations
 
@@ -26,10 +33,12 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.costs import TOKEN_BYTES
 from repro.runtime.clock import EventLoop
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
-from repro.runtime.wire import Uplink
+from repro.runtime.transports import get_transport
+from repro.runtime.wire import Wire
 
 
 @dataclass
@@ -40,6 +49,15 @@ class SimRequest:
     payload: Optional[tuple] = None           # (codes, scales, stage0_cache)
     engine_req: object = None                 # serving.engine.Request
     slot: int = -1                            # cloud slot (virtual accounting)
+    # streamed-transport state (see runtime/transports.py)
+    edge_cache: object = None                 # stage-0 decode cache (edge)
+    edge_pos: int = 0
+    cloud_cache: object = None                # stage-1 decode cache (cloud)
+    cloud_pos: int = 0
+    stream_row: Optional[tuple] = None        # last (payload, scales) row
+    last_token: int = -1
+    produced: int = 0                         # ids sent down so far
+    stream_t0: Optional[float] = None         # RTT accounting anchor
 
     @property
     def uid(self) -> int:
@@ -50,7 +68,7 @@ class EdgeDevice:
     """Serial edge processor feeding a shared uplink."""
 
     def __init__(self, dev_id: int, *, loop: EventLoop, cost: CostModel,
-                 uplink: Uplink, server: "CloudServer",
+                 uplink: Wire, server: "CloudServer",
                  bank: Optional[SplitModelBank], mode: str, wire_mode: str,
                  d_r: int, telemetry: Telemetry, numerics_split: int = 1):
         self.dev_id = dev_id
@@ -97,9 +115,9 @@ class EdgeDevice:
         if self.mode == "edge":
             self._finish_local(req)
             return
-        nbytes = self.cost.payload_bytes(self.mode, self.wire_mode,
-                                         t.prompt_len, self.d_r, t.split,
-                                         req.max_new_tokens)
+        transport = get_transport(t.transport)
+        transport.after_edge_prefill(self, req)
+        nbytes = transport.prefill_uplink_bytes(self, req)
         t.wire_bytes = nbytes
         start, done = self.uplink.transfer(nbytes, self.loop.now)
         t.t_uplink_start, t.t_uplink_done = start, done
@@ -136,7 +154,7 @@ class EdgeDevice:
         """Mobile-only baseline: everything already ran on the device."""
         t = req.trace
         t.t_uplink_start = t.t_uplink_done = t.t_cloud_start = t.t_edge_done
-        t.t_first_token = t.t_done = t.t_edge_done
+        t.t_first_token = t.t_cloud_done = t.t_done = t.t_edge_done
         if self.bank is not None:
             # mobile-only runs the same hosted model (split is a no-op for
             # numerics when both halves share a device); one engine per
@@ -165,7 +183,7 @@ class CloudServer:
                  background_load: Optional[Callable[[float], float]] = None,
                  engine_seed: int = 0, max_len: int = 256,
                  on_done: Optional[Callable[[SimRequest], None]] = None,
-                 numerics_split: int = 1):
+                 numerics_split: int = 1, wire: Optional[Wire] = None):
         self.numerics_split = numerics_split
         self.loop = loop
         self.cost = cost
@@ -178,7 +196,10 @@ class CloudServer:
         self.max_len = max_len
         self.engine_seed = engine_seed
         self.on_done = on_done
+        self.wire = wire                          # downlink back to the fleet
+        self.devices: List[object] = []           # filled by the simulator
         self.pending: deque[SimRequest] = deque()
+        self.stream_ready: deque[SimRequest] = deque()  # rows awaiting a turn
         self.slots: List[Optional[SimRequest]] = [None] * max_concurrent
         self.slot_history: List[tuple] = []       # (uid, slot) admissions
         self._engines: Dict[int, object] = {}     # split -> ServingEngine
@@ -193,6 +214,13 @@ class CloudServer:
     def num_active(self) -> int:
         return sum(1 for r in self.slots if r is not None)
 
+    @property
+    def num_decoding(self) -> int:
+        """Slots decoding locally (cache handoff); streamed slots wait for
+        rows from the edge and take no batched decode turns."""
+        return sum(1 for r in self.slots
+                   if r is not None and r.trace.transport != "streamed")
+
     def current_load(self, now: float) -> float:
         """Combined congestion the mobile observes when it pings the server:
         external tenants (background) plus this fleet's own occupancy."""
@@ -203,6 +231,11 @@ class CloudServer:
     # -- request flow -------------------------------------------------------
     def on_payload(self, req: SimRequest) -> None:
         self.pending.append(req)
+        self._kick()
+
+    def on_stream_row(self, req: SimRequest) -> None:
+        """A streamed decode row arrived over the uplink."""
+        self.stream_ready.append(req)
         self._kick()
 
     def _kick(self) -> None:
@@ -249,7 +282,10 @@ class CloudServer:
             return
         if now < self._prefill_busy_until:
             return                      # mid-burst: next _prefill_done rearms
-        if self.num_active > 0:
+        if self.stream_ready:
+            self._stream_turn(now)
+            return
+        if self.num_decoding > 0:
             self._decode_step(now)
             return
         self._busy = False
@@ -302,64 +338,82 @@ class CloudServer:
         return self._cloud_results.pop(req.uid)
 
     def _prefill_done(self, req: SimRequest) -> None:
-        t = req.trace
-        t.t_first_token = self.loop.now
-        eng = self._engine(t.split)
-        if eng is not None:
-            if self.mode == "split":
-                logits_row, cache1, cache0 = self._cloud_numerics(req)
-                req.engine_req = eng.submit_prefilled(
-                    t.prompt_len, [cache0, cache1], logits_row,
-                    max_new_tokens=req.max_new_tokens)
-            else:
-                req.engine_req = eng.submit(
-                    req.tokens, max_new_tokens=req.max_new_tokens)
-            req.payload = None
-            if req.engine_req.done:
-                self._complete(req)
-        else:
-            self._virtual_left[t.uid] = req.max_new_tokens - 1
-            if self._virtual_left[t.uid] <= 0:
-                self._complete(req)
+        get_transport(req.trace.transport).start_cloud_decode(self, req)
+        self.loop.schedule(0.0, self._service)
+
+    def _stream_turn(self, now: float) -> None:
+        """Serve every arrived streamed row in one serial-accelerator turn:
+        rows of the same split batch into one charged step; numerics run
+        when the turn completes."""
+        batch = list(self.stream_ready)
+        self.stream_ready.clear()
+        load = min(max(self.background_load(now), 0.0), 0.99)
+        dur = 0.0
+        for split in sorted({r.trace.split for r in batch}):
+            k = sum(1 for r in batch if r.trace.split == split)
+            dur += self.cost.cloud_decode_step_s(split, self.d_r, k, load)
+        self.telemetry.counters["stream_cloud_turns"] += 1
+        self.telemetry.counters["stream_rows"] += len(batch)
+        self.loop.schedule(dur, lambda: self._stream_turn_done(batch))
+
+    def _stream_turn_done(self, batch: List[SimRequest]) -> None:
+        get_transport("streamed").serve_rows(self, batch)
         self.loop.schedule(0.0, self._service)
 
     def _decode_step(self, now: float) -> None:
-        batch = self.num_active
+        batch = self.num_decoding
         load = min(max(self.background_load(now), 0.0), 0.99)
         dur = self.cost.decode_step_s(batch, where="cloud", load=load)
         self.loop.schedule(dur, self._decode_done)
 
     def _decode_done(self) -> None:
+        handoff = [r for r in self.slots
+                   if r is not None and r.trace.transport != "streamed"]
         if self.bank is not None:
             stepped = set()
-            for req in list(self.slots):
-                if req is None:
-                    continue
+            for req in handoff:
                 eng = self._engine(req.trace.split)
                 if id(eng) not in stepped:
                     eng.step()
                     stepped.add(id(eng))
-            for req in list(self.slots):
-                if req is not None and req.engine_req.done:
+            for req in handoff:
+                if req.engine_req.done:
                     self._complete(req)
         else:
-            for req in list(self.slots):
-                if req is None:
-                    continue
+            for req in handoff:
                 self._virtual_left[req.uid] -= 1
                 if self._virtual_left[req.uid] <= 0:
                     self._complete(req)
         self.loop.schedule(0.0, self._service)
 
     def _complete(self, req: SimRequest) -> None:
+        """Cloud-side decode finished (cache-handoff / cloud-only): free the
+        slot and ship the whole sampled-id batch down the Wire; the request
+        is delivered — and recorded — when the downlink drains."""
         t = req.trace
-        t.t_done = self.loop.now
+        t.t_cloud_done = self.loop.now
         if req.engine_req is not None:
             t.new_tokens = len(req.engine_req.generated)
         else:
             t.new_tokens = req.max_new_tokens
         if req.slot >= 0:
             self.slots[req.slot] = None
+            req.slot = -1
+        if self.wire is None:               # no modeled downlink: instant
+            self._deliver(req)
+            return
+        nbytes = TOKEN_BYTES * t.new_tokens
+        t.downlink_bytes += nbytes
+        start, done = self.wire.transfer_down(nbytes, self.loop.now)
+        t.mobile_energy_mj += self.wire.downlink_energy_mj(nbytes)
+        self.loop.schedule_at(done, lambda: self._deliver(req))
+
+    def _deliver(self, req: SimRequest) -> None:
+        t = req.trace
+        t.t_done = self.loop.now
+        # batch return: the mobile sees its first token when the whole id
+        # shipment lands — the same observation point streamed TTFT uses
+        t.t_first_token = t.t_done
         self.telemetry.record(t)
         self.sim_request_done(req)
 

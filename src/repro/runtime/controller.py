@@ -8,20 +8,25 @@ bandwidth derated by contention) and re-runs Algorithm 1's selection phase
 requests are then routed to the winning split: congestion pushes the split
 deeper — more layers stay on the edge — while still shipping less than the
 raw input.
+
+When ``transport_mode="auto"`` the selection phase also scores both decode
+transports per split — cache handoff's prompt-proportional KV bytes vs the
+streamed transport's per-token RTT x ``new_tokens`` — and the controller
+routes new arrivals to the winning (split, transport) pair.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.core.planner import select_split_online
 from repro.core.profiler import HardwareProfile
 from repro.runtime.clock import EventLoop
 from repro.runtime.telemetry import ControlDecision, Telemetry
-from repro.runtime.wire import Uplink
+from repro.runtime.wire import Wire
 
 
 class AdaptiveSplitController:
-    def __init__(self, *, loop: EventLoop, uplink: Uplink,
+    def __init__(self, *, loop: EventLoop, uplink: Wire,
                  cloud_load: Callable[[float], float],
                  cfg, d_r: int, seq: int,
                  candidate_splits: Sequence[int],
@@ -31,7 +36,13 @@ class AdaptiveSplitController:
                  get_split: Callable[[], int],
                  interval_s: float = 0.05,
                  handoff_bytes_per_layer: float = 0.0,
-                 objective: str = "latency"):
+                 objective: str = "latency",
+                 transport_mode: str = "cache_handoff",
+                 new_tokens: int = 1,
+                 set_transport: Optional[Callable[[str], None]] = None,
+                 get_transport: Optional[Callable[[], str]] = None):
+        assert transport_mode in ("cache_handoff", "streamed", "auto"), \
+            transport_mode
         self.handoff_bytes_per_layer = handoff_bytes_per_layer
         self.loop = loop
         self.uplink = uplink
@@ -48,6 +59,10 @@ class AdaptiveSplitController:
         self.get_split = get_split
         self.interval_s = interval_s
         self.objective = objective
+        self.transport_mode = transport_mode
+        self.new_tokens = new_tokens
+        self.set_transport = set_transport
+        self.get_transport = get_transport or (lambda: "cache_handoff")
         self.running = False
 
     def start(self) -> None:
@@ -60,6 +75,8 @@ class AdaptiveSplitController:
     def decide(self, now: float) -> int:
         load = self.cloud_load(now)
         link_bps = self.uplink.observed_bytes_per_s(now)
+        transports = ("cache_handoff", "streamed") \
+            if self.transport_mode == "auto" else (self.transport_mode,)
         best, _ = select_split_online(
             self.cfg, self.seq, self.d_r,
             candidate_splits=self.candidates,
@@ -68,13 +85,20 @@ class AdaptiveSplitController:
             wire_mode=self.wire_mode,
             link_energy_mj_per_byte=self.uplink.transfer_energy_mj(1.0),
             handoff_bytes_per_layer=self.handoff_bytes_per_layer,
-            objective=self.objective)
+            objective=self.objective,
+            transports=transports, new_tokens=self.new_tokens,
+            downlink_bytes_per_s=self.uplink.observed_down_bytes_per_s(now),
+            downlink_energy_mj_per_byte=self.uplink.downlink_energy_mj(1.0))
         old = self.get_split()
         self.telemetry.record_decision(ControlDecision(
             t=now, cloud_load=load, link_bytes_per_s=link_bps,
-            old_split=old, new_split=best["split"]))
+            old_split=old, new_split=best["split"],
+            transport=best["transport"]))
         if best["split"] != old:
             self.set_split(best["split"])
+        if self.set_transport is not None and \
+                best["transport"] != self.get_transport():
+            self.set_transport(best["transport"])
         return best["split"]
 
     def _tick(self) -> None:

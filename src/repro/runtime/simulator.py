@@ -11,6 +11,13 @@ Serving modes:
   "split"  the paper: edge layers + butterfly reduce/quantize, compressed wire
   "cloud"  cloud-only offload: raw input features cross the wire
   "edge"   mobile-only: everything on the device, nothing crosses
+
+Decode transports (split mode, multi-token requests — runtime/transports.py):
+  "cache_handoff"  ship the edge stage-0 KV cache up; decode cloud-side
+  "streamed"       edge keeps its cache; one (1, d_r) row up + one id down
+                   per generated token
+  "auto"           the adaptive controller picks per request, alongside the
+                   split (requires adapt=True)
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
 from repro.runtime.clock import EventLoop
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
-from repro.runtime.wire import Uplink
+from repro.runtime.wire import Wire
 
 
 def ramp_load(t0: float, t1: float, l0: float = 0.0,
@@ -39,12 +46,48 @@ def ramp_load(t0: float, t1: float, l0: float = 0.0,
     return f
 
 
+@dataclass(frozen=True)
+class Arrival:
+    """One request of a pre-built arrival trace."""
+    device: int
+    t: float
+    tokens: Optional[np.ndarray] = None      # prompt ids (numerics mode)
+
+
+def poisson_arrivals(*, num_devices: int, num_requests: int,
+                     arrival_rate: float, prompt_len: int,
+                     vocab_size: Optional[int] = None,
+                     seed: int = 0) -> List[Arrival]:
+    """THE arrival-trace builder (shared by the simulator, the CLI and
+    ``benchmarks.run runtime``): deterministic per-device Poisson
+    inter-arrivals, plus prompt tokens when ``vocab_size`` is given.
+    Building the trace once and passing it through ``SimConfig.arrivals``
+    guarantees mode/wire/transport comparisons run the identical trace."""
+    out: List[Arrival] = []
+    per_dev = [num_requests // num_devices] * num_devices
+    for i in range(num_requests % num_devices):
+        per_dev[i] += 1
+    for dev, n in enumerate(per_dev):
+        rng = np.random.default_rng([seed, dev])
+        t = 0.0
+        for _ in range(n):
+            t += rng.exponential(1.0 / arrival_rate)
+            tokens = None
+            if vocab_size:
+                tokens = rng.integers(0, vocab_size, size=(prompt_len,),
+                                      dtype=np.int64).astype(np.int32)
+            out.append(Arrival(dev, t, tokens))
+    return out
+
+
 @dataclass
 class SimConfig:
     cfg: object                              # ModelConfig (butterfly optional)
     mode: str = "split"                      # split | cloud | edge
     wire_mode: str = "int8"                  # raw | reduced | int8
+    transport: str = "cache_handoff"         # cache_handoff | streamed | auto
     network: str = "3g"                      # 3g | 4g | wifi | inter_pod
+    duplex: str = "split"                    # split | shared downlink FIFO
     num_devices: int = 4
     num_requests: int = 16
     arrival_rate: float = 20.0               # per device, requests/s
@@ -61,12 +104,18 @@ class SimConfig:
     max_concurrent: int = 8
     seed: int = 0
     numerics: bool = True
+    arrivals: Optional[Sequence[Arrival]] = None   # overrides Poisson build
 
 
 class Simulation:
     def __init__(self, sim_cfg: SimConfig):
         c = sim_cfg
         assert c.mode in ("split", "cloud", "edge"), c.mode
+        assert c.transport in ("cache_handoff", "streamed", "auto"), \
+            c.transport
+        if c.transport == "auto":
+            assert c.adapt and c.mode == "split", \
+                "transport='auto' needs the adaptive controller (split mode)"
         base = c.cfg
         if base.butterfly is not None:
             base = replace(base, butterfly=None)
@@ -74,8 +123,10 @@ class Simulation:
         self.base_cfg = base
         self.loop = EventLoop()
         self.telemetry = Telemetry()
-        self.uplink = Uplink.named(c.network)
+        self.uplink = Wire.named(c.network, duplex=c.duplex)
         self.current_split = c.initial_split
+        self.current_transport = "cache_handoff" if c.transport == "auto" \
+            else c.transport
         self.candidates = list(c.candidate_splits) if c.candidate_splits \
             else list(range(1, base.num_layers))
         assert c.initial_split in self.candidates, \
@@ -91,7 +142,8 @@ class Simulation:
             background_load=c.background_load,
             engine_seed=c.seed,
             max_len=c.prompt_len + c.max_new_tokens + 2,
-            on_done=self._on_done, numerics_split=c.initial_split)
+            on_done=self._on_done, numerics_split=c.initial_split,
+            wire=self.uplink)
         self.devices = [
             EdgeDevice(i, loop=self.loop, cost=self.cost, uplink=self.uplink,
                        server=self.server, bank=self.bank, mode=c.mode,
@@ -99,6 +151,7 @@ class Simulation:
                        telemetry=self.telemetry,
                        numerics_split=c.initial_split)
             for i in range(c.num_devices)]
+        self.server.devices = self.devices       # downlink delivery targets
         self.controller: Optional[object] = None
         if c.adapt and c.mode == "split":
             from repro.runtime.controller import AdaptiveSplitController
@@ -113,7 +166,11 @@ class Simulation:
                 interval_s=c.control_interval_s,
                 handoff_bytes_per_layer=(
                     self.cost.stage0_cache_bytes(c.prompt_len, 1)
-                    if c.max_new_tokens > 1 else 0.0))
+                    if c.max_new_tokens > 1 else 0.0),
+                transport_mode=c.transport,
+                new_tokens=c.max_new_tokens,
+                set_transport=self._set_transport,
+                get_transport=lambda: self.current_transport)
 
     # ------------------------------------------------------------------ api
     def run(self) -> Telemetry:
@@ -136,6 +193,9 @@ class Simulation:
     def _set_split(self, split: int) -> None:
         self.current_split = split
 
+    def _set_transport(self, transport: str) -> None:
+        self.current_transport = transport
+
     def _on_done(self, req: SimRequest) -> None:
         self._remaining -= 1
         if self._remaining == 0 and self.controller is not None:
@@ -143,36 +203,32 @@ class Simulation:
 
     def _schedule_arrivals(self) -> None:
         c = self.sim_cfg
+        arrivals = c.arrivals if c.arrivals is not None else poisson_arrivals(
+            num_devices=c.num_devices, num_requests=c.num_requests,
+            arrival_rate=c.arrival_rate, prompt_len=c.prompt_len,
+            vocab_size=self.base_cfg.vocab_size if c.numerics else None,
+            seed=c.seed)
+        self._remaining = len(arrivals)
         self.requests: List[SimRequest] = []
-        uid = 0
-        per_dev = [c.num_requests // c.num_devices] * c.num_devices
-        for i in range(c.num_requests % c.num_devices):
-            per_dev[i] += 1
-        for dev, n in enumerate(per_dev):
-            rng = np.random.default_rng([c.seed, dev])
-            t = 0.0
-            for _ in range(n):
-                t += rng.exponential(1.0 / c.arrival_rate)
-                tokens = None
-                if c.numerics:
-                    tokens = rng.integers(
-                        0, self.base_cfg.vocab_size, size=(c.prompt_len,),
-                        dtype=np.int64).astype(np.int32)
-                trace = RequestTrace(
-                    uid=uid, device=dev, mode=c.mode, wire_mode=c.wire_mode,
-                    split=0, prompt_len=c.prompt_len)
-                req = SimRequest(trace=trace, tokens=tokens,
-                                 max_new_tokens=c.max_new_tokens)
-                self.requests.append(req)
-                uid += 1
-                self.loop.schedule_at(t, self._make_arrival(dev, req))
+        for uid, a in enumerate(arrivals):
+            assert not c.numerics or a.tokens is not None, \
+                "numerics mode needs prompt tokens in the arrival trace"
+            trace = RequestTrace(
+                uid=uid, device=a.device, mode=c.mode, wire_mode=c.wire_mode,
+                split=0, prompt_len=c.prompt_len)
+            req = SimRequest(trace=trace, tokens=a.tokens,
+                             max_new_tokens=c.max_new_tokens)
+            self.requests.append(req)
+            self.loop.schedule_at(a.t, self._make_arrival(a.device, req))
 
     def _make_arrival(self, dev: int, req: SimRequest) -> Callable[[], None]:
         def fire() -> None:
-            # the split is pinned when the mobile starts the request — the
-            # controller's latest decision governs new arrivals only
+            # split and transport are pinned when the mobile starts the
+            # request — the controller's latest decision governs new
+            # arrivals only
             if self.sim_cfg.mode == "split":
                 req.trace.split = self.current_split
+                req.trace.transport = self.current_transport
             elif self.sim_cfg.mode == "edge":
                 req.trace.split = self.base_cfg.num_layers
             else:

@@ -19,10 +19,13 @@ bucket-padded ``(B, S)`` shapes, so a candidate sweep re-uses executables
 instead of recompiling per prompt length.  The int8 wire runs through the
 fused Pallas reduce+quant / dequant+restore kernels (kernels/ops.py).
 
-For multi-token requests the edge hands its stage-0 KV cache to the
-cloud alongside the codes (prefill/decode-disaggregation style cache
-transfer) so decode runs entirely cloud-side; streaming decode over the wire
-is the DESIGN.md extension.
+Multi-token requests pick a decode transport (runtime/transports.py):
+``cache_handoff`` ships the edge stage-0 KV cache to the cloud alongside the
+codes (prefill/decode-disaggregation style cache transfer) so decode runs
+entirely cloud-side; ``streamed`` keeps the stage-0 cache on the edge and
+streams one fused-quantized ``(1, d_r)`` row per generated token through the
+butterfly (DESIGN.md section 8.6) — the bank's compile cache grows per-token
+``edge_step``/``cloud_step`` entries for it.
 """
 from __future__ import annotations
 
@@ -81,27 +84,47 @@ class CostModel:
 
     def decode_step_s(self, batch: int, *, where: str,
                       load: float = 0.0) -> float:
-        f = costs.model_flops_decode(self.cfg, batch)
-        hw = self.edge if where == "edge" else self.cloud
         # decode is weight-bound: every step streams the full parameter set
-        nbytes = costs.param_count(self.cfg) * act_bytes(self.cfg)
+        f, nbytes = costs.full_decode_step_cost(self.cfg, batch)
+        hw = self.edge if where == "edge" else self.cloud
         return hw.latency_s(f, nbytes) / max(1e-9, 1.0 - load)
 
     def edge_energy_mj(self, seconds: float) -> float:
         return seconds * self.edge.compute_power_w * 1e3
 
+    def edge_decode_step_s(self, split: int, d_r: int) -> float:
+        """One streamed-decode edge step: embed + layers [0, split) +
+        reduce/quantize for a single token."""
+        f, b = costs.edge_decode_step_cost(self.cfg, split, d_r)
+        return self.edge.latency_s(f, b)
+
+    def cloud_decode_step_s(self, split: int, d_r: int, batch: int = 1,
+                            load: float = 0.0) -> float:
+        """One streamed-decode cloud turn: restore + layers [split, N) +
+        unembed for ``batch`` arrived rows."""
+        f, b = costs.cloud_decode_step_cost(self.cfg, split, d_r, batch)
+        return self.cloud.latency_s(f, b) / max(1e-9, 1.0 - load)
+
+    def stream_row_bytes(self, wire_mode: str, d_r: int) -> float:
+        """Per-token uplink bytes of the streamed transport: one boundary
+        row in the wire format (int8 codes + f32 scale for the paper's
+        mode)."""
+        return wire_mode_bytes(self.cfg, 1, d_r, wire_mode)
+
     def payload_bytes(self, mode: str, wire_mode: str, seq: int,
-                      d_r: int, split: int, new_tokens: int = 1) -> float:
-        """Uplink bytes per request.  Split requests generating more than one
-        token additionally ship the edge stage-0 KV cache (cache handoff —
-        counted honestly; avoiding it is the decode-over-the-wire
-        extension)."""
+                      d_r: int, split: int, new_tokens: int = 1,
+                      transport: str = "cache_handoff") -> float:
+        """Prefill uplink bytes per request.  Split requests generating more
+        than one token additionally ship the edge stage-0 KV cache under the
+        ``cache_handoff`` decode transport (counted honestly); the
+        ``streamed`` transport keeps that cache on the edge and pays one
+        ``stream_row_bytes`` row per later token instead."""
         if mode == "cloud":
             return input_bytes(self.cfg, seq)
         if mode == "edge":
             return 0.0
         b = wire_mode_bytes(self.cfg, seq, d_r, wire_mode)
-        if new_tokens > 1:
+        if new_tokens > 1 and transport == "cache_handoff":
             b += self.stage0_cache_bytes(seq, split)
         return b
 
@@ -408,6 +431,71 @@ class SplitModelBank:
 
         return decode
 
+    def _make_edge_step(self, split: int):
+        """Streamed-decode edge half: embed one token, run layers [0, split)
+        against the edge-resident stage-0 decode cache, emit one wire row —
+        the per-token payload that replaces the stage-0 cache handoff."""
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops as kops
+        cfg, segs, scale, embed, _, _, LOCAL = self._stage_ctx()
+        tfm, wm = self._tfm, self.wire_mode
+
+        def edge_step(params, tok, cache0, pos):
+            x = embed(params["embed"], tok, scale=scale)
+            x, nc0, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                mode="decode", range_cache=cache0, pos=pos,
+                shared_params=params.get("shared_attn"))
+            if wm == "raw":
+                return x, jnp.zeros((*x.shape[:2], 1), jnp.float32), nc0
+            if wm == "reduced":
+                r = x @ params["butterfly"]["w_reduce"]
+                return r, jnp.zeros((*r.shape[:2], 1), jnp.float32), nc0
+            if self._kernel_wire_ok:
+                codes, scales = kops.butterfly_reduce_quant(
+                    x, params["butterfly"]["w_reduce"], bits=self.wire_bits)
+            else:
+                from repro.core.quantization import quantize
+                codes, scales = quantize(x @ params["butterfly"]["w_reduce"],
+                                         self.wire_bits)
+            return codes, scales, nc0
+
+        return jax.jit(edge_step)
+
+    def _make_cloud_step(self, split: int):
+        """Streamed-decode cloud half: restore one arrived row and run layers
+        [split, N) against the cloud-resident stage-1 decode cache.  NOT
+        jit-wrapped here — the engine folds sampling into the same jitted
+        step (serving/engine._sampled_stream_step), shared by every engine of
+        this split."""
+        from repro.kernels import ops as kops
+        cfg, segs, _, _, rms_norm, unembed, LOCAL = self._stage_ctx()
+        tfm, wm, dt = self._tfm, self.wire_mode, self._dt
+
+        def cloud_step(params, payload, scales, cache1, pos):
+            if wm == "raw":
+                x = payload
+            elif wm == "reduced":
+                x = payload @ params["butterfly"]["w_restore"]
+            elif self._kernel_wire_ok:
+                x = kops.butterfly_dequant_restore(
+                    payload, scales, params["butterfly"]["w_restore"],
+                    out_dtype=dt)
+            else:
+                from repro.core.quantization import dequantize
+                x = dequantize(payload, scales, dt) @ \
+                    params["butterfly"]["w_restore"]
+            x, nc1, _ = tfm.apply_layer_range(
+                segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
+                pctx=LOCAL, mode="decode", range_cache=cache1, pos=pos,
+                shared_params=params.get("shared_attn"))
+            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+            table = params["embed"] if cfg.tie_embeddings else params["head"]
+            return unembed(table, x, cfg.logit_softcap), nc1
+
+        return cloud_step
+
 
 class SplitRunner:
     """Thin facade over the bank's shared backbone + compile cache for one
@@ -459,6 +547,46 @@ class SplitRunner:
         bank.jit_cache_keys.add(("cloud", self.split, Bb, Sb))
         return logits[:B], bank._slice_cache(cache1, 1, self.split, B, S)
 
+    # --------------------------------------------------------- streamed decode
+    def edge_step(self, params, tok, cache0, pos):
+        """One streamed-decode edge step: ``tok`` (B, 1) int32, ``cache0``
+        the edge-resident stage-0 decode cache (pad with
+        :meth:`pad_decode_cache` first), ``pos`` (B,) int32 write positions.
+        Returns ``(payload, scales, new_cache0)`` — one wire row per batch
+        element."""
+        import jax.numpy as jnp
+        bank = self.bank
+        tok = jnp.asarray(tok, jnp.int32)
+        out = bank._fn("edge_step", self.split)(
+            params, tok, cache0, jnp.asarray(pos, jnp.int32))
+        bank.jit_cache_keys.add(("edge_step", self.split, tok.shape[0], 1))
+        return out
+
+    def stream_step(self, engine, req, cache, payload, scales, pos: int):
+        """One streamed-decode cloud turn through ``engine``'s single-slot
+        entry, with the bank's compile-cache bookkeeping (mirrors
+        :meth:`edge_step`).  Returns ``(token, new_cache)``."""
+        out = engine.stream_step(req, cache, payload, scales, pos)
+        self.bank.jit_cache_keys.add(("cloud_step", self.split, 1, 1))
+        return out
+
+    def pad_decode_cache(self, cache, stage: int, length: int):
+        """Pad a prefill-shaped (B=1, seq=S) stage cache to decode capacity
+        ``length`` so per-token steps can write rows past the prompt —
+        the streamed analogue of the engine pool's max_len sizing.  Leaves
+        without a short seq axis (recurrent state) pass through."""
+        import jax
+        import jax.numpy as jnp
+        template = self.bank._cache_template(stage, self.split, 1, length)
+
+        def pad(leaf, t):
+            if leaf.shape == t.shape:
+                return leaf
+            pads = [(0, ts - ls) for ls, ts in zip(leaf.shape, t.shape)]
+            return jnp.pad(leaf, pads)
+
+        return jax.tree.map(pad, cache, template)
+
     # ------------------------------------------------------------- engine glue
     def _engine_prefill(self, params, toks):
         import jax.numpy as jnp
@@ -478,7 +606,8 @@ class SplitRunner:
                              max_len=max_len, seed=seed,
                              stages=self.bank.engine_stages(self.split),
                              prefill_fn=self._engine_prefill,
-                             decode_fn=self.bank._fn("decode", self.split))
+                             decode_fn=self.bank._fn("decode", self.split),
+                             stream_fn=self.bank._fn("cloud_step", self.split))
 
     # --------------------------------------------------------------- reference
     def reference_prefill(self, toks):

@@ -22,9 +22,15 @@ class RequestTrace:
     wire_mode: str                     # raw | reduced | int8 (split mode)
     split: int                         # partition point used (0 = no split)
     prompt_len: int
+    transport: str = "cache_handoff"   # decode transport (split mode)
     new_tokens: int = 0
-    wire_bytes: float = 0.0
+    wire_bytes: float = 0.0            # uplink bytes (codes, cache, rows)
+    downlink_bytes: float = 0.0        # sampled token ids back to the mobile
     mobile_energy_mj: float = 0.0
+    # streamed-decode loop accounting (one entry per generated token after
+    # the first: edge step -> row uplink -> cloud turn -> token downlink)
+    stream_steps: int = 0
+    stream_rtt_s: float = 0.0          # total row-sent -> token-back time
     # absolute virtual timestamps (seconds)
     t_arrival: float = 0.0
     t_edge_start: float = 0.0
@@ -33,7 +39,8 @@ class RequestTrace:
     t_uplink_done: float = 0.0
     t_cloud_start: float = 0.0         # admitted into the batch server
     t_first_token: float = 0.0
-    t_done: float = 0.0
+    t_cloud_done: float = 0.0          # cloud's last involvement
+    t_done: float = 0.0                # response fully at the mobile
 
     # -- derived breakdown --------------------------------------------------
     @property
@@ -58,7 +65,16 @@ class RequestTrace:
 
     @property
     def cloud_s(self) -> float:
-        return self.t_done - self.t_cloud_start
+        """Cloud phase: prefill + decode turns (for the streamed transport
+        this window interleaves edge steps, row uplinks and token downlinks;
+        ``stream_rtt_s``/``mean_stream_rtt`` expose the per-token loop)."""
+        return self.t_cloud_done - self.t_cloud_start
+
+    @property
+    def downlink_s(self) -> float:
+        """Final response downlink (the whole id batch for cache handoff,
+        the last streamed token for streamed decode)."""
+        return self.t_done - self.t_cloud_done
 
     @property
     def latency_s(self) -> float:
@@ -76,6 +92,7 @@ class RequestTrace:
             "uplink_s": self.uplink_s,
             "cloud_queue_s": self.cloud_queue_s,
             "cloud_s": self.cloud_s,
+            "downlink_s": self.downlink_s,
         }
 
 
@@ -100,6 +117,7 @@ class ControlDecision:
     link_bytes_per_s: float
     old_split: int
     new_split: int
+    transport: str = "cache_handoff"   # decode transport picked alongside
 
 
 class Telemetry:
@@ -128,12 +146,20 @@ class Telemetry:
             out[f"{name}_mean_ms"] = (sum(xs) / len(xs) * 1e3) if xs else float("nan")
         if self.traces:
             for key in ("edge_queue_s", "edge_compute_s", "uplink_wait_s",
-                        "uplink_s", "cloud_queue_s", "cloud_s"):
+                        "uplink_s", "cloud_queue_s", "cloud_s", "downlink_s"):
                 out[f"mean_{key[:-2]}_ms"] = sum(
                     t.breakdown()[key] for t in self.traces) / len(self.traces) * 1e3
             out["total_wire_mb"] = sum(t.wire_bytes for t in self.traces) / 1e6
             out["mean_wire_kb"] = sum(
                 t.wire_bytes for t in self.traces) / len(self.traces) / 1e3
+            out["total_downlink_kb"] = sum(
+                t.downlink_bytes for t in self.traces) / 1e3
+            out["mean_downlink_b"] = sum(
+                t.downlink_bytes for t in self.traces) / len(self.traces)
+            steps = sum(t.stream_steps for t in self.traces)
+            out["mean_stream_rtt_ms"] = (sum(
+                t.stream_rtt_s for t in self.traces) / steps * 1e3) if steps \
+                else 0.0
             out["mean_mobile_energy_mj"] = sum(
                 t.mobile_energy_mj for t in self.traces) / len(self.traces)
             span = max(t.t_done for t in self.traces) - \
@@ -144,25 +170,29 @@ class Telemetry:
     def split_trajectory(self) -> List[Dict[str, float]]:
         return [{"t": d.t, "cloud_load": d.cloud_load,
                  "link_bytes_per_s": d.link_bytes_per_s,
-                 "split": d.new_split} for d in self.decisions]
+                 "split": d.new_split, "transport": d.transport}
+                for d in self.decisions]
 
     # -- rendering ----------------------------------------------------------
-    _COLS = ("uid", "dev", "split", "S", "edgeq_ms", "edge_ms", "upwait_ms",
-             "uplink_ms", "cloudq_ms", "cloud_ms", "total_ms", "wire_kb",
-             "energy_mj")
+    _COLS = ("uid", "dev", "split", "tport", "S", "edgeq_ms", "edge_ms",
+             "upwait_ms", "uplink_ms", "cloudq_ms", "cloud_ms", "dlink_ms",
+             "total_ms", "wire_kb", "down_b", "energy_mj")
 
     def table(self) -> str:
         """Per-request latency-breakdown table (the CLI's main output)."""
         rows = [" ".join(f"{c:>9s}" for c in self._COLS)]
         for t in self.traces:
-            vals = (t.uid, t.device, t.split, t.prompt_len,
+            tport = "stream" if t.transport == "streamed" else "handoff"
+            vals = (t.uid, t.device, t.split, tport, t.prompt_len,
                     t.edge_queue_s * 1e3, t.edge_compute_s * 1e3,
                     t.uplink_wait_s * 1e3, t.uplink_s * 1e3,
                     t.cloud_queue_s * 1e3, t.cloud_s * 1e3,
-                    t.latency_s * 1e3, t.wire_bytes / 1e3,
+                    t.downlink_s * 1e3, t.latency_s * 1e3,
+                    t.wire_bytes / 1e3, t.downlink_bytes,
                     t.mobile_energy_mj)
             rows.append(" ".join(
-                f"{v:>9d}" if isinstance(v, int) else f"{v:>9.3f}"
+                f"{v:>9d}" if isinstance(v, int) else
+                f"{v:>9s}" if isinstance(v, str) else f"{v:>9.3f}"
                 for v in vals))
         return "\n".join(rows)
 

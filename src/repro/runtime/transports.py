@@ -1,0 +1,221 @@
+"""Pluggable decode transports: how a multi-token split request moves its
+decode phase between the edge and the cloud.
+
+``cache_handoff``  (prefill/decode disaggregation, the runtime's historical
+behavior, extracted here): the edge ships its stage-0 KV cache up with the
+prefill codes, the cloud decodes whole tokens locally in the batch engine,
+and the sampled ids come back in one downlink shipment at completion.
+Uplink cost grows with prompt length (the cache), decode steps are cheap
+(no wire on the token path).
+
+``streamed``  (decode over the wire, DESIGN.md section 8.6): the edge keeps
+a decode cache for layers [0, j) and, per generated token, embeds the
+token, runs its half, and sends ONE fused-quantized ``(1, d_r)`` row
+through the butterfly; the cloud applies restore + layers [j, N) against
+its own cache and returns the sampled id over the downlink.  Uplink cost is
+flat in prompt length; every token pays one RTT (row up + cloud turn + id
+down).
+
+JointDNN's observation that generation workloads want a different
+partition/transport than one-shot inference is exactly this trade: long
+prompt + long generation favors ``streamed`` (the handoff cache dominates),
+short prompt + fat RTT favors ``cache_handoff``.  The controller can pick
+per request (``transport="auto"``) via the same online selection phase that
+picks the split (core/planner.select_split_online).
+
+The transport objects are stateless singletons: they own the per-request
+choreography (what crosses which wire when, who keeps which cache) while
+the actors keep the machinery (serial frontiers, slot pools, batched
+service turns).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costs import TOKEN_BYTES
+
+
+class DecodeTransport:
+    """Per-request decode choreography; subclasses are stateless."""
+
+    name: str = "?"
+    streams_tokens: bool = False
+
+    def prefill_uplink_bytes(self, device, req) -> float:
+        t = req.trace
+        return device.cost.payload_bytes(
+            device.mode, device.wire_mode, t.prompt_len, device.d_r,
+            t.split, req.max_new_tokens, transport=self.name)
+
+    def after_edge_prefill(self, device, req) -> None:
+        """Hook between the edge prefill numerics and the uplink."""
+
+    def start_cloud_decode(self, server, req) -> None:
+        raise NotImplementedError
+
+
+class CacheHandoffTransport(DecodeTransport):
+    """Ship the stage-0 cache up; decode entirely cloud-side.  The sampled
+    ids come down in one shipment at completion, so the mobile's first
+    token arrives with the last — TTFT is stamped at delivery
+    (CloudServer._deliver), the same observation point the streamed
+    transport uses."""
+
+    name = "cache_handoff"
+
+    def start_cloud_decode(self, server, req) -> None:
+        t = req.trace
+        eng = server._engine(t.split)
+        if eng is not None:
+            if server.mode == "split":
+                logits_row, cache1, cache0 = server._cloud_numerics(req)
+                req.engine_req = eng.submit_prefilled(
+                    t.prompt_len, [cache0, cache1], logits_row,
+                    max_new_tokens=req.max_new_tokens)
+            else:
+                req.engine_req = eng.submit(
+                    req.tokens, max_new_tokens=req.max_new_tokens)
+            req.payload = None
+            if req.engine_req.done:
+                server._complete(req)
+        else:
+            server._virtual_left[t.uid] = req.max_new_tokens - 1
+            if server._virtual_left[t.uid] <= 0:
+                server._complete(req)
+
+
+class StreamedTransport(DecodeTransport):
+    """Keep the stage-0 cache on the edge; stream one row per token."""
+
+    name = "streamed"
+    streams_tokens = True
+
+    # -- edge side ----------------------------------------------------------
+    def after_edge_prefill(self, device, req) -> None:
+        """The edge retains its stage-0 cache (padded to decode capacity)
+        instead of shipping it; only codes + scales cross the uplink."""
+        t = req.trace
+        req.edge_pos = t.prompt_len
+        if device.bank is not None and req.payload is not None:
+            codes, scales, cache0 = req.payload
+            runner = device.bank.runner(t.split)
+            req.edge_cache = runner.pad_decode_cache(
+                cache0, 0, device.server.max_len)
+            req.payload = (codes, scales, None)
+
+    def token_at_device(self, device, req, tok) -> None:
+        """A sampled id reached the mobile: either the response is complete,
+        or the edge runs its per-token half and streams the next row."""
+        t = req.trace
+        now = device.loop.now
+        if req.stream_t0 is not None:
+            t.stream_rtt_s += now - req.stream_t0
+            t.stream_steps += 1
+            req.stream_t0 = None
+        if req.produced == 1:
+            t.t_first_token = now
+        req.last_token = tok
+        if req.produced >= req.max_new_tokens:
+            t.new_tokens = req.produced
+            t.t_done = now
+            device.telemetry.record(t)
+            device.server.sim_request_done(req)
+            return
+        start = max(now, device.free_at)
+        dur = device.cost.edge_decode_step_s(t.split, device.d_r)
+        device.free_at = start + dur
+        t.mobile_energy_mj += device.cost.edge_energy_mj(dur)
+        device.loop.schedule_at(start + dur,
+                                lambda: self.edge_step_done(device, req))
+
+    def edge_step_done(self, device, req) -> None:
+        t = req.trace
+        now = device.loop.now
+        if device.bank is not None:
+            runner = device.bank.runner(t.split)
+            tok = np.asarray([[req.last_token]], np.int32)
+            payload, scales, req.edge_cache = runner.edge_step(
+                runner.params, tok, req.edge_cache, [req.edge_pos])
+            req.stream_row = (payload, scales)
+        req.edge_pos += 1
+        nbytes = device.cost.stream_row_bytes(device.wire_mode, device.d_r)
+        t.wire_bytes += nbytes
+        req.stream_t0 = now                      # RTT: row ready -> id back
+        start, done = device.uplink.transfer(nbytes, now)
+        t.mobile_energy_mj += device.uplink.transfer_energy_mj(nbytes)
+        device.telemetry.counters["stream_edge_steps"] += 1
+        device.loop.schedule_at(done,
+                                lambda: device.server.on_stream_row(req))
+
+    # -- cloud side ---------------------------------------------------------
+    def start_cloud_decode(self, server, req) -> None:
+        """Cloud prefill finished: sample the first token and send it down.
+        The first-token timestamp is set when the id reaches the mobile —
+        the streamed transport's TTFT honestly includes the downlink."""
+        t = req.trace
+        if server.bank is not None:
+            logits_row, cache1, _ = server._cloud_numerics(req)
+            runner = server.bank.runner(t.split)
+            req.cloud_cache = runner.pad_decode_cache(cache1, 1,
+                                                      server.max_len)
+            req.cloud_pos = t.prompt_len
+            eng = server._engine(t.split)
+            req.engine_req = eng.submit_streamed(
+                t.prompt_len, logits_row, max_new_tokens=req.max_new_tokens)
+            req.payload = None
+            tok = req.engine_req.generated[0]
+        else:
+            tok = 0
+        self.send_token(server, req, tok)
+
+    def serve_rows(self, server, batch) -> None:
+        """One serial-accelerator turn over the arrived rows: numerics run
+        per request through the engine's single-slot streamed entry (the
+        bank-shared compiled cloud step); the turn's duration was already
+        charged by the server per split group."""
+        for req in batch:
+            t = req.trace
+            if server.bank is not None:
+                runner = server.bank.runner(t.split)
+                payload, scales = req.stream_row
+                tok, req.cloud_cache = runner.stream_step(
+                    server._engine(t.split), req.engine_req, req.cloud_cache,
+                    payload, scales, req.cloud_pos)
+            else:
+                tok = 0
+            req.cloud_pos += 1
+            self.send_token(server, req, tok)
+
+    def send_token(self, server, req, tok) -> None:
+        """One sampled id over the downlink to the mobile; on the last token
+        the cloud's involvement ends here (slot + cache released before the
+        downlink completes)."""
+        t = req.trace
+        now = server.loop.now
+        req.produced += 1
+        t.downlink_bytes += TOKEN_BYTES
+        start, done = server.wire.transfer_down(TOKEN_BYTES, now)
+        t.mobile_energy_mj += server.wire.downlink_energy_mj(TOKEN_BYTES)
+        if req.produced >= req.max_new_tokens:
+            t.t_cloud_done = now
+            if req.slot >= 0:
+                server.slots[req.slot] = None
+                req.slot = -1
+            req.cloud_cache = None
+        dev = server.devices[t.device]
+        server.loop.schedule_at(
+            done, lambda: self.token_at_device(dev, req, tok))
+
+
+TRANSPORTS = {
+    "cache_handoff": CacheHandoffTransport(),
+    "streamed": StreamedTransport(),
+}
+
+
+def get_transport(name: str) -> DecodeTransport:
+    try:
+        return TRANSPORTS[name]
+    except KeyError:
+        raise KeyError(f"unknown decode transport {name!r}; "
+                       f"known: {sorted(TRANSPORTS)}") from None

@@ -1,15 +1,27 @@
-"""The Wire: a contended serial uplink over the core/wireless link models.
+"""The Wire: a contended serial mobile/cloud link over the core/wireless
+link models.
 
 Any object exposing ``uplink_seconds(nbytes)`` / ``uplink_energy_mj(nbytes)``
 (``WirelessNetwork`` from the paper's Table III, or the TPU ``Interconnect``)
-backs an :class:`Uplink`.  The link is a FIFO pipe: when several edge devices
-share it, a transfer waits until the link drains — that queueing delay is the
-contention term that only appears at the request-stream level (JointDNN
-Sec. V observes the same effect on shared cellular uplinks).
+backs a :class:`Wire`; link models that also expose ``downlink_seconds`` /
+``downlink_energy_mj`` get asymmetric downlink figures, otherwise the
+downlink mirrors the uplink.  Each direction is a FIFO pipe: when several
+edge devices share it, a transfer waits until the link drains — that
+queueing delay is the contention term that only appears at the
+request-stream level (JointDNN Sec. V observes the same effect on shared
+cellular uplinks).  ``duplex="split"`` (the default, full-duplex radio)
+gives each direction its own FIFO; ``duplex="shared"`` makes both
+directions contend for one serial frontier (half-duplex).
+
+The downlink carries sampled tokens back to the mobile: one batch of ids at
+request completion for the cache-handoff decode transport, one id per
+generation step for the streamed transport — which is what makes the
+per-token RTT (uplink row + cloud turn + downlink id) a first-class
+quantity here (:meth:`Wire.rtt_s`).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from repro.core.wireless import get_link
@@ -24,49 +36,109 @@ class LinkStats:
     n_transfers: int = 0
 
 
-class Uplink:
-    """Serial FIFO link shared by a set of edge devices."""
+class Wire:
+    """Serial FIFO link pair (uplink + downlink) shared by a fleet of edge
+    devices.  ``stats`` accounts the uplink, ``down_stats`` the downlink."""
 
-    def __init__(self, link_model, name: Optional[str] = None):
+    def __init__(self, link_model, name: Optional[str] = None,
+                 duplex: str = "split"):
+        assert duplex in ("split", "shared"), duplex
         self.model = link_model
         self.name = name or getattr(link_model, "name", "link")
-        self.free_at = 0.0
+        self.duplex = duplex
+        self.free_at = 0.0                  # uplink frontier
+        self.down_free_at = 0.0             # downlink frontier
         self.stats = LinkStats()
+        self.down_stats = LinkStats()
 
     @classmethod
-    def named(cls, name: str) -> "Uplink":
-        return cls(get_link(name), name=name)
+    def named(cls, name: str, duplex: str = "split") -> "Wire":
+        return cls(get_link(name), name=name, duplex=duplex)
 
+    # ------------------------------------------------------------- durations
     def transfer_seconds(self, nbytes: float) -> float:
         return self.model.uplink_seconds(nbytes)
 
-    def transfer(self, nbytes: float, now: float) -> Tuple[float, float]:
-        """Enqueue ``nbytes`` at virtual time ``now``; returns
-        ``(start, done)`` — ``start > now`` means the link was busy."""
-        start = max(now, self.free_at)
-        dur = self.transfer_seconds(nbytes)
-        done = start + dur
-        self.free_at = done
-        s = self.stats
-        s.bytes_sent += nbytes
-        s.busy_s += dur
-        s.wait_s += start - now
-        s.energy_mj += self.model.uplink_energy_mj(nbytes)
-        s.n_transfers += 1
-        return start, done
-
-    def nominal_bytes_per_s(self) -> float:
-        return 1.0 / max(self.model.uplink_seconds(1.0), 1e-30)
-
-    def observed_bytes_per_s(self, now: float) -> float:
-        """Effective per-request goodput including contention waits — what a
-        device actually experiences, and what the adaptive controller feeds
-        back into the selection phase."""
-        s = self.stats
-        occupied = s.busy_s + s.wait_s
-        if s.n_transfers == 0 or occupied <= 0:
-            return self.nominal_bytes_per_s()
-        return s.bytes_sent / occupied
+    def downlink_seconds(self, nbytes: float) -> float:
+        f = getattr(self.model, "downlink_seconds", None)
+        return f(nbytes) if f is not None else self.model.uplink_seconds(nbytes)
 
     def transfer_energy_mj(self, nbytes: float) -> float:
         return self.model.uplink_energy_mj(nbytes)
+
+    def downlink_energy_mj(self, nbytes: float) -> float:
+        f = getattr(self.model, "downlink_energy_mj", None)
+        return f(nbytes) if f is not None \
+            else self.model.uplink_energy_mj(nbytes)
+
+    def rtt_s(self, up_bytes: float, down_bytes: float) -> float:
+        """Nominal (contention-free) round trip: ship ``up_bytes`` up and
+        ``down_bytes`` back — the streamed transport's per-token wire cost."""
+        return self.transfer_seconds(up_bytes) + \
+            self.downlink_seconds(down_bytes)
+
+    # ------------------------------------------------------------- transfers
+    def transfer(self, nbytes: float, now: float) -> Tuple[float, float]:
+        """Enqueue ``nbytes`` on the uplink at virtual time ``now``; returns
+        ``(start, done)`` — ``start > now`` means the link was busy."""
+        start = max(now, self.free_at)
+        if self.duplex == "shared":
+            start = max(start, self.down_free_at)
+        dur = self.transfer_seconds(nbytes)
+        done = start + dur
+        self.free_at = done
+        if self.duplex == "shared":
+            self.down_free_at = done
+        self._account(self.stats, nbytes, dur, start - now,
+                      self.transfer_energy_mj(nbytes))
+        return start, done
+
+    def transfer_down(self, nbytes: float, now: float) -> Tuple[float, float]:
+        """Enqueue ``nbytes`` on the downlink at virtual time ``now``."""
+        start = max(now, self.down_free_at)
+        if self.duplex == "shared":
+            start = max(start, self.free_at)
+        dur = self.downlink_seconds(nbytes)
+        done = start + dur
+        self.down_free_at = done
+        if self.duplex == "shared":
+            self.free_at = done
+        self._account(self.down_stats, nbytes, dur, start - now,
+                      self.downlink_energy_mj(nbytes))
+        return start, done
+
+    @staticmethod
+    def _account(s: LinkStats, nbytes: float, dur: float, wait: float,
+                 energy: float) -> None:
+        s.bytes_sent += nbytes
+        s.busy_s += dur
+        s.wait_s += wait
+        s.energy_mj += energy
+        s.n_transfers += 1
+
+    # ------------------------------------------------------------- goodput
+    def nominal_bytes_per_s(self) -> float:
+        return 1.0 / max(self.model.uplink_seconds(1.0), 1e-30)
+
+    def nominal_down_bytes_per_s(self) -> float:
+        return 1.0 / max(self.downlink_seconds(1.0), 1e-30)
+
+    def observed_bytes_per_s(self, now: float) -> float:
+        """Effective per-request uplink goodput including contention waits —
+        what a device actually experiences, and what the adaptive controller
+        feeds back into the selection phase."""
+        return self._observed(self.stats, self.nominal_bytes_per_s())
+
+    def observed_down_bytes_per_s(self, now: float) -> float:
+        return self._observed(self.down_stats, self.nominal_down_bytes_per_s())
+
+    @staticmethod
+    def _observed(s: LinkStats, nominal: float) -> float:
+        occupied = s.busy_s + s.wait_s
+        if s.n_transfers == 0 or occupied <= 0:
+            return nominal
+        return s.bytes_sent / occupied
+
+
+# historical name: the runtime grew a downlink, the class kept working
+Uplink = Wire

@@ -14,6 +14,11 @@ The engine's forward functions are pluggable: the split runtime's
 ``SplitModelBank`` supplies jitted prefill/decode closures over the shared
 backbone (one compile per split, shared by every engine of that split);
 stand-alone engines default to the single-mesh ``models.model`` forwards.
+For the streamed decode transport the engine adds a single-slot entry
+(``submit_streamed`` + ``stream_step``): the request holds no cache-pool
+slot — its cloud-side stage cache lives with the caller — and each arrived
+``(1, d_r)`` row runs through the bank-shared compiled cloud step with
+in-graph sampling.
 """
 from __future__ import annotations
 
@@ -70,6 +75,18 @@ def _write_slot_jit(pool, new, slot):
 # decode_fn -> jitted (decode + in-graph sampling) step, shared by every
 # engine using the same decode closure (e.g. all engines of one bank split)
 _STEP_FNS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_STREAM_STEP_FNS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _sample_ingraph(row, key, temps):
+    """Greedy argmax + temperature categorical, inside the jitted graph."""
+    greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+    key, sub = jax.random.split(key)
+    keys = jax.random.split(sub, row.shape[0])
+    safe_t = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, row / safe_t)
+    toks = jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+    return toks, key
 
 
 def _sampled_step(decode_fn):
@@ -88,16 +105,33 @@ def _sampled_step(decode_fn):
     def step(params, tokens, caches, pos, key, temps):
         logits, caches = ref()(params, tokens, caches, pos)
         row = logits[:, 0].astype(jnp.float32)             # (B, V)
-        greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
-        key, sub = jax.random.split(key)
-        keys = jax.random.split(sub, row.shape[0])
-        safe_t = jnp.maximum(temps, 1e-6)[:, None]
-        sampled = jax.vmap(jax.random.categorical)(keys, row / safe_t)
-        toks = jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+        toks, key = _sample_ingraph(row, key, temps)
         return toks, row, caches, key
 
     jitted = jax.jit(step)
     _STEP_FNS[decode_fn] = jitted
+    return jitted
+
+
+def _sampled_stream_step(stream_fn):
+    """stream_fn -> jitted (cloud half of one streamed row + in-graph
+    sampling), shared by every engine wired to the same cloud-step closure
+    (all engines of one bank split).  Same weakref discipline as
+    :func:`_sampled_step`."""
+    try:
+        return _STREAM_STEP_FNS[stream_fn]
+    except KeyError:
+        pass
+    ref = weakref.ref(stream_fn)
+
+    def step(params, payload, scales, cache, pos, key, temps):
+        logits, cache = ref()(params, payload, scales, cache, pos)
+        row = logits[:, 0].astype(jnp.float32)             # (B, V)
+        toks, key = _sample_ingraph(row, key, temps)
+        return toks, row, cache, key
+
+    jitted = jax.jit(step)
+    _STREAM_STEP_FNS[stream_fn] = jitted
     return jitted
 
 
@@ -106,7 +140,8 @@ class ServingEngine:
                  max_len: int = 512, pctx: ParallelContext = LOCAL,
                  seed: int = 0, stages=None,
                  prefill_fn: Optional[Callable] = None,
-                 decode_fn: Optional[Callable] = None):
+                 decode_fn: Optional[Callable] = None,
+                 stream_fn: Optional[Callable] = None):
         self.params = params
         self.built = built
         self.cfg = built.cfg
@@ -123,10 +158,14 @@ class ServingEngine:
         self.active: List[Optional[Request]] = [None] * max_batch
         self.key = jax.random.key(seed)
         self._prefill = prefill_fn or self._default_prefill
-        # hold a strong ref to the decode closure: _STEP_FNS is weak-keyed,
-        # so the shared jitted step lives exactly as long as its decode fn
+        # hold strong refs to the decode/stream closures: the step caches
+        # are weak-keyed, so each shared jitted step lives exactly as long
+        # as its closure
         self._decode = decode_fn or self._decode_fn
         self._step = _sampled_step(self._decode)
+        self._stream = stream_fn
+        self._stream_step = _sampled_stream_step(stream_fn) \
+            if stream_fn is not None else None
         self._last = np.zeros((max_batch, 1), np.int32)     # last token/slot
         self._temps = np.zeros((max_batch,), np.float32)
         self._uid = 0
@@ -167,6 +206,50 @@ class ServingEngine:
             req.logits_history.append(jax.device_get(last_logits))
         self._emit(slot, req, self._sample(last_logits, req))
         return req
+
+    def submit_streamed(self, prompt_len: int, last_logits,
+                        max_new_tokens: int = 32, temperature: float = 0.0,
+                        eos_id: Optional[int] = None,
+                        record_logits: bool = False) -> Request:
+        """Admit a streamed-decode request: the edge keeps its half's decode
+        cache and streams one reduced row per token, so the request holds NO
+        cache-pool slot here — the engine only does sampling and stop
+        bookkeeping.  The caller owns the cloud-side stage cache and applies
+        each arrived row via :meth:`stream_step`."""
+        assert prompt_len < self.max_len, "prompt exceeds cache"
+        req = Request(self._uid, np.zeros((prompt_len,), np.int32),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      eos_id=eos_id, record_logits=record_logits)
+        self._uid += 1
+        last_logits = jnp.asarray(last_logits)
+        if req.record_logits:
+            req.logits_history.append(jax.device_get(last_logits))
+        tok = self._sample(last_logits, req)
+        req.generated.append(tok)
+        if (req.eos_id is not None and tok == req.eos_id) or \
+                req.max_new_tokens <= 1:
+            req.done = True
+        return req
+
+    def stream_step(self, req: Request, cache, payload, scales, pos: int):
+        """Single-slot streamed decode: apply one externally-computed edge
+        row to ``cache`` (the request's cloud-side stage cache) through the
+        shared compiled cloud step (one dispatch: restore + layers [split, N)
+        + sampling) and return ``(token, new_cache)``."""
+        assert self._stream_step is not None, "engine built without stream_fn"
+        toks, row, cache, self.key = self._stream_step(
+            self.params, jnp.asarray(payload), jnp.asarray(scales), cache,
+            jnp.asarray([pos], jnp.int32), self.key,
+            jnp.asarray([req.temperature], jnp.float32))
+        tok = int(jax.device_get(toks)[0])
+        if req.record_logits:
+            req.logits_history.append(np.asarray(jax.device_get(row))[0])
+        req.generated.append(tok)
+        self.decode_steps += 1
+        if (req.eos_id is not None and tok == req.eos_id) or \
+                len(req.generated) >= req.max_new_tokens:
+            req.done = True
+        return tok, cache
 
     @property
     def num_active(self) -> int:
