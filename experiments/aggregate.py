@@ -73,12 +73,20 @@ def ingest_runtime(csv_path: str, out_path: str = RUNTIME_JSON) -> int:
     return len(results)
 
 
-def print_runtime(path: str = RUNTIME_JSON):
+def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
+    """Render the split-serving runtime table from the checked-in
+    trajectory.  ``require=True`` (the CI render step) fails loudly when the
+    file is missing/empty instead of silently printing nothing — and any
+    schema drift from new telemetry fields surfaces as a KeyError here."""
     if not os.path.exists(path):
+        if require:
+            raise SystemExit(f"{path} missing: runtime table cannot render")
         return
     doc = json.load(open(path))
     runs = doc.get("runs", [])
     if not runs:
+        if require:
+            raise SystemExit(f"{path} has no runs: nothing to render")
         return
     last = runs[-1]
     w = last.get("workload", {})
@@ -138,10 +146,18 @@ def main():
     ap.add_argument("--ingest-runtime", metavar="CSV",
                     help="append runtime/json rows from a benchmarks.run "
                          "runtime CSV capture to BENCH_runtime.json")
+    ap.add_argument("--runtime-only", action="store_true",
+                    help="render ONLY the runtime table from the checked-in "
+                         "BENCH_runtime.json, failing if it cannot render "
+                         "(the CI artifact step: catches schema drift from "
+                         "new telemetry fields)")
     args = ap.parse_args()
     if args.ingest_runtime:
         n = ingest_runtime(args.ingest_runtime)
         print(f"ingested {n} runtime run(s) into {RUNTIME_JSON}")
+    if args.runtime_only:
+        print_runtime(require=True)
+        return
     recs = load(args.dir)
 
     def get(arch, shape, mesh):

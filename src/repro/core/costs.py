@@ -171,6 +171,20 @@ def _act_bytes(cfg: ModelConfig) -> int:
     return 2 if cfg.dtype == "bfloat16" else 4
 
 
+def model_parallel_share(cost, mp: int = 1):
+    """Per-device share of a ``(flops, bytes)`` pair when the stage is
+    sharded over a model axis of degree ``mp``: attention heads, d_ff
+    columns and experts divide, so FLOPs and weight-streaming bytes both
+    scale 1/mp (Megatron column->row sharding).  Activation replication and
+    the per-layer psum are not charged — ideal scaling, matching the
+    planner's bytes-proxy granularity.  ``mp <= 1`` is the identity, so
+    un-sharded callers keep their exact historical estimates."""
+    if mp <= 1:
+        return cost
+    f, b = cost
+    return f / mp, b / mp
+
+
 def full_decode_step_cost(cfg: ModelConfig, batch: int = 1):
     """(flops, weight_bytes) for one full-model decode step (weight-bound:
     every step streams the whole parameter set) — the cost of a cloud-side

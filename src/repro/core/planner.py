@@ -210,7 +210,8 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                         transports: Sequence[str] = ("cache_handoff",),
                         new_tokens: int = 1,
                         downlink_bytes_per_s: Optional[float] = None,
-                        downlink_energy_mj_per_byte: float = 0.0):
+                        downlink_energy_mj_per_byte: float = 0.0,
+                        edge_mp: int = 1, cloud_mp: int = 1):
     """One online iteration of Algorithm 1's selection phase.
 
     Unlike :func:`plan_transformer_split` this takes the *measured* state the
@@ -250,16 +251,23 @@ def select_split_online(cfg, seq: int, d_r: int, *,
         cf += costs.embed_flops(cfg, seq)
         eb = ef / max(cfg.d_model, 1)
         cb = cf / max(cfg.d_model, 1)
+        # model-parallel stages: each half's compute divides by its degree,
+        # matching what the runtime's CostModel charges (DESIGN.md sec. 11)
+        ef, eb = costs.model_parallel_share((ef, eb), edge_mp)
+        cf, cb = costs.model_parallel_share((cf, cb), cloud_mp)
         t_edge = edge.latency_s(ef, eb) / max(1e-9, 1 - edge_load)
         t_cloud = cloud.latency_s(cf, cb) / max(1e-9, 1 - cloud_load)
-        esf, esb = costs.edge_decode_step_cost(cfg, j, d_r)
-        csf, csb = costs.cloud_decode_step_cost(cfg, j, d_r)
+        esf, esb = costs.model_parallel_share(
+            costs.edge_decode_step_cost(cfg, j, d_r), edge_mp)
+        csf, csb = costs.model_parallel_share(
+            costs.cloud_decode_step_cost(cfg, j, d_r), cloud_mp)
         t_edge_step = edge.latency_s(esf, esb) / max(1e-9, 1 - edge_load)
         t_cloud_step = cloud.latency_s(csf, csb) / max(1e-9, 1 - cloud_load)
         # a handoff decode turn runs the FULL hosted model cloud-side (the
         # engine's fused edge+wire+cloud step) — split-invariant, and what
         # the runtime's CostModel.decode_step_s actually charges
-        hf, hb = costs.full_decode_step_cost(cfg)
+        hf, hb = costs.model_parallel_share(
+            costs.full_decode_step_cost(cfg), cloud_mp)
         t_handoff_step = cloud.latency_s(hf, hb) / max(1e-9, 1 - cloud_load)
         down_bytes = T * costs.TOKEN_BYTES
         for tp in transports:

@@ -49,6 +49,11 @@ def main():
     ap.add_argument("--layers", type=int, default=4,
                     help="override layer count of the reduced arch "
                          "(>=2; more layers = more candidate splits)")
+    ap.add_argument("--heads", type=int, default=None,
+                    help="override attention head count of the reduced arch "
+                         "(model-parallel degrees must divide the heads)")
+    ap.add_argument("--kv-heads", type=int, default=None,
+                    help="override kv head count of the reduced arch")
     ap.add_argument("--mode", choices=("split", "cloud", "edge"),
                     default="split")
     ap.add_argument("--wire-mode", choices=("raw", "reduced", "int8"),
@@ -84,6 +89,15 @@ def main():
     ap.add_argument("--cloud-x", type=float, default=None,
                     help="cloud speed as a multiple of the edge platform "
                          "(default: paper's TX2 -> 1080Ti pairing)")
+    ap.add_argument("--edge-mp", type=int, default=1,
+                    help="model-axis degree of the edge half's stage "
+                         "(DESIGN.md section 11; timing divides by it, and "
+                         "with numerics the half runs shard_map'd over that "
+                         "many local devices)")
+    ap.add_argument("--cloud-mp", type=int, default=1,
+                    help="model-axis degree of the cloud half's stage "
+                         "(heterogeneous edge=1 cloud=N is the expected "
+                         "shape; numerics needs that many local devices)")
     ap.add_argument("--max-concurrent", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-numerics", action="store_true",
@@ -98,6 +112,10 @@ def main():
     cfg = get_config(args.arch).reduced()
     if args.layers and args.layers != cfg.num_layers:
         cfg = dataclasses.replace(cfg, num_layers=max(2, args.layers))
+    if args.heads:
+        cfg = dataclasses.replace(cfg, num_heads=args.heads)
+    if args.kv_heads:
+        cfg = dataclasses.replace(cfg, num_kv_heads=args.kv_heads)
     edge = JETSON_TX2
     cloud = edge.scaled(args.cloud_x, "cloud_slice") if args.cloud_x \
         else GTX_1080TI
@@ -109,6 +127,7 @@ def main():
         prompt_len=args.seq, max_new_tokens=args.max_new_tokens,
         d_r=args.d_r, initial_split=args.split,
         edge=edge, cloud=cloud,
+        edge_mp=args.edge_mp, cloud_mp=args.cloud_mp,
         background_load=parse_ramp(args.load_ramp) if args.load_ramp else None,
         adapt=args.adapt, control_interval_s=args.control_interval,
         max_concurrent=args.max_concurrent, seed=args.seed,
@@ -117,10 +136,15 @@ def main():
     sim = Simulation(sim_cfg)
     tel = sim.run()
 
+    mp_note = ""
+    if args.edge_mp > 1 or args.cloud_mp > 1:
+        mp_note = f", model-parallel edge x{args.edge_mp} / " \
+                  f"cloud x{args.cloud_mp}"
     print(f"# {args.mode} serving, wire={args.wire_mode}, "
           f"transport={args.transport}, network={args.network}, "
           f"{args.devices} devices, {args.requests} requests, "
-          f"arch={cfg.name} ({cfg.num_layers} layers, d_r={args.d_r})")
+          f"arch={cfg.name} ({cfg.num_layers} layers, d_r={args.d_r})"
+          f"{mp_note}")
     print(tel.table())
     s = tel.summary()
     print(f"\nlatency  p50 {s['latency_p50_ms']:9.2f} ms   "

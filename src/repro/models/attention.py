@@ -100,9 +100,25 @@ def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def kv_cache_spec(batch_axis, length_axis=None) -> dict:
-    return {"k": P(batch_axis, length_axis, None, None),
-            "v": P(batch_axis, length_axis, None, None)}
+def kv_cache_spec(batch_axis, length_axis=None, head_axis=None) -> dict:
+    """``head_axis`` shards the kv-head dim (tensor-parallel stages keep each
+    rank's cache slice resident with its attention-head shard)."""
+    return {"k": P(batch_axis, length_axis, head_axis, None),
+            "v": P(batch_axis, length_axis, head_axis, None)}
+
+
+def tp_attention_specs(cfg: ModelConfig, axis: str = "model") -> dict:
+    """Megatron-style specs for one attention param set sharded over a model
+    axis: fused q/k/v projections column-parallel (whole heads per shard),
+    the out projection row-parallel — its partial outputs are psum'd by
+    ``apply_layer``.  Requires whole-head divisibility, asserted by
+    :func:`check_tp_divisibility` at spec-build time."""
+    specs = {"wq": P(None, axis), "wk": P(None, axis), "wv": P(None, axis),
+             "wo": P(axis, None)}
+    if cfg.qk_norm:
+        specs["q_norm"] = P(None)          # per-head-dim, replicated
+        specs["k_norm"] = P(None)
+    return specs
 
 
 # ---------------------------------------------------------------------------
@@ -113,10 +129,14 @@ def kv_cache_spec(batch_axis, length_axis=None) -> dict:
 def _project_qkv(params, x, cfg: ModelConfig, positions, rope: bool = True):
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    n_q = params["wq"].shape[1] // hd          # >= cfg.num_heads when padded
+    # head counts come from the param shapes, not cfg: inside a shard_map
+    # body each model rank holds a whole-head slice of wq/wk/wv (and the
+    # padded-head variant widens wq), so cfg.num_heads is the *global* count
+    n_q = params["wq"].shape[1] // hd
+    n_kv = params["wk"].shape[1] // hd
     q = (x @ params["wq"]).reshape(B, S, n_q, hd)
-    k = (x @ params["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
-    v = (x @ params["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    k = (x @ params["wk"]).reshape(B, S, n_kv, hd)
+    v = (x @ params["wv"]).reshape(B, S, n_kv, hd)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.rms_eps)
         k = rms_norm(k, params["k_norm"], cfg.rms_eps)

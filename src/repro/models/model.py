@@ -118,6 +118,35 @@ def init_model(key, built: BuiltModel):
     return params, specs
 
 
+def tp_param_specs(built: BuiltModel, *, with_butterfly: Optional[bool] = None):
+    """PartitionSpec pytree matching :func:`init_model`'s params with every
+    stage layer sharded tensor-parallel over the ``model`` axis (attention
+    heads / d_ff columns / experts; see ``transformer.tp_layer_specs``) and
+    everything else — embeddings, norms, LM head, butterfly — replicated.
+    This is the in_specs tree manual shard_map stages feed params through
+    (serving/pipeline.py, runtime/split_exec.py)."""
+    from jax.sharding import PartitionSpec as P  # noqa: F811 (local alias)
+    cfg = built.cfg
+    assert not cfg.is_encdec, "enc-dec archs have no tensor-parallel stages"
+    dt = _dtype(cfg)
+    if with_butterfly is None:
+        with_butterfly = built.has_butterfly
+    specs: dict = {
+        "embed": P(),
+        "final_norm": P(),
+        "stages": [tfm.tp_stage_specs(list(segs), cfg, dt)
+                   for segs in built.stages],
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P()
+    if with_butterfly:
+        specs["butterfly"] = {"w_reduce": P(), "w_restore": P()}
+    if cfg.hybrid_attn_every is not None:
+        specs["shared_attn"] = {"mixer": attn_lib.tp_attention_specs(cfg),
+                                "ffn": tfm.tp_mlp_specs()}
+    return specs
+
+
 # ---------------------------------------------------------------------------
 # embedding frontends
 # ---------------------------------------------------------------------------

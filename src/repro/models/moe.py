@@ -178,12 +178,26 @@ def apply_moe(params, x, *, cfg: ModelConfig, pctx: ParallelContext, act: str):
     """x: (B, S, d) -> (out, aux dict)."""
     mcfg = cfg.moe
     B, S, d = x.shape
-    if not pctx.enabled:
+    if not pctx.enabled or pctx.manual:
+        # manual: the caller is already inside a shard_map body (the split
+        # pipeline's model-parallel stages) — no nested shard_map.  This rank
+        # holds an E/mp expert slice; tokens are replicated over the model
+        # axis, every rank ranks the full token set into the same capacity
+        # slots (identical f32 router math), computes only its experts, and
+        # _moe_shard psums the partial combine over the model axis.  With
+        # mp == 1 (or no mesh) this is exactly the local path, so the
+        # replicated pipeline's numerics are untouched.
+        mp = pctx.mp_size if pctx.manual else 1
+        assert mcfg.num_experts % mp == 0, (mcfg.num_experts, mp)
+        e_off = 0
+        if mp > 1:
+            e_off = jax.lax.axis_index(pctx.model_axis) * \
+                (mcfg.num_experts // mp)
         cap = _capacity(B * S, mcfg)
         out, lb, zl = _moe_shard(
             x.reshape(B * S, d), params["router"], params["wg"], params["wu"],
-            params["wd"], mcfg=mcfg, act=act, e_offset=0, capacity=cap,
-            model_axis=None)
+            params["wd"], mcfg=mcfg, act=act, e_offset=e_off, capacity=cap,
+            model_axis=pctx.model_axis if mp > 1 else None)
         out = out.reshape(B, S, d)
     else:
         dp, mp = pctx.dp_size, pctx.mp_size

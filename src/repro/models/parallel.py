@@ -4,6 +4,18 @@ Model code never imports the launcher; it receives a ParallelContext that is
 either ``LOCAL`` (single device, tests/benches) or built from the production
 mesh (dry-run / train / serve).  MoE uses it for explicit shard_map expert
 parallelism; everything else uses GSPMD propagation from the param specs.
+
+Two execution regimes share the dataclass (DESIGN.md section 11):
+
+* **automatic** (``manual=False``): the context wraps the full mesh and layer
+  code relies on GSPMD propagation (or opens its own shard_map, as MoE does).
+* **manual** (``manual=True``): the code is *already inside* a shard_map body
+  — every mesh axis is manual, params arrive as per-rank shards, and layer
+  code must issue explicit collectives.  The split pipeline runs its stages
+  this way on a 2-D ``(pod, model)`` mesh: attention heads / d_ff / experts
+  shard over ``model`` (Megatron column->row within a pod), each partial
+  output is ``psum``'d over ``model`` via :func:`model_psum`, and only the
+  fused-quantized butterfly codes ever cross the ``pod`` axis.
 """
 from __future__ import annotations
 
@@ -19,6 +31,11 @@ class ParallelContext:
     mesh: Optional[jax.sharding.Mesh]
     data_axes: Tuple[str, ...] = ("data",)     # ("pod", "data") when multi-pod
     model_axis: str = "model"
+    pod_axis: str = "pod"
+    # True when the owning computation already runs inside a shard_map body:
+    # params are per-rank shards and layer code must psum partial outputs
+    # over ``model_axis`` itself (see transformer.apply_layer / moe.apply_moe)
+    manual: bool = False
 
     @property
     def enabled(self) -> bool:
@@ -32,9 +49,15 @@ class ParallelContext:
 
     @property
     def mp_size(self) -> int:
-        if self.mesh is None:
+        if self.mesh is None or self.model_axis not in self.mesh.shape:
             return 1
         return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def tensor_parallel(self) -> bool:
+        """True when layer params are model-axis shards that demand explicit
+        partial-output reduction (the manual regime with a real model axis)."""
+        return self.manual and self.mp_size > 1
 
     def batch_spec_axes(self):
         """Axes tuple for sharding a batch dim (None when local)."""
@@ -52,3 +75,26 @@ def make_context(mesh: Optional[jax.sharding.Mesh]) -> ParallelContext:
     axes = mesh.axis_names
     data_axes = tuple(a for a in axes if a in ("pod", "data"))
     return ParallelContext(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def manual_context(mesh: Optional[jax.sharding.Mesh], *,
+                   model_axis: str = "model") -> ParallelContext:
+    """Context for layer code running *inside* a shard_map body over ``mesh``.
+
+    ``data_axes`` is empty on purpose: inside the body every rank sees its
+    local batch shard already, so nothing may re-shard the batch dim.  With
+    ``mesh=None`` (or a mesh without ``model_axis``) this degrades to a
+    LOCAL-equivalent context, which keeps single-degree callers on the exact
+    replicated code path."""
+    if mesh is None:
+        return LOCAL
+    return ParallelContext(mesh=mesh, data_axes=(), model_axis=model_axis,
+                           manual=True)
+
+
+def model_psum(x, pctx: ParallelContext):
+    """Reduce a model-axis-partial activation; identity outside the manual
+    tensor-parallel regime so replicated callers pay nothing."""
+    if pctx.tensor_parallel:
+        return jax.lax.psum(x, pctx.model_axis)
+    return x

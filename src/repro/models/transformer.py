@@ -25,7 +25,7 @@ from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
 from repro.models.common import apply_mlp, init_mlp, init_rms_norm, rms_norm
-from repro.models.parallel import LOCAL, ParallelContext
+from repro.models.parallel import LOCAL, ParallelContext, model_psum
 
 # Dry-run knob: when True, segment scans fully unroll so XLA's cost analysis
 # (which counts while-loop bodies once) reports exact per-step FLOPs/bytes.
@@ -220,6 +220,75 @@ def apply_layer_range(segments: Sequence[Segment], stage_params, x, lo: int,
 
 
 # ---------------------------------------------------------------------------
+# tensor-parallel (model-axis) sharding specs for manual shard_map stages
+# ---------------------------------------------------------------------------
+
+
+def check_tp_divisibility(defs: Sequence[LayerDef], cfg: ModelConfig,
+                          mp: int) -> None:
+    """Model-parallel stages shard whole attention heads, whole d_ff columns
+    and whole experts — fail loudly when ``mp`` can't divide them.  Mixers
+    without a tensor-parallel decomposition here (mamba/xlstm) replicate and
+    run redundantly per rank, so they impose no constraint."""
+    if mp <= 1:
+        return
+    for ldef in defs:
+        if ldef.mixer != "attn":
+            continue
+        if ldef.cross:
+            raise ValueError("tensor-parallel stages do not support "
+                             "cross-attention layers")
+        if attn._padded_heads(cfg) % mp or cfg.num_kv_heads % mp:
+            raise ValueError(
+                f"model axis {mp} must divide heads "
+                f"({attn._padded_heads(cfg)}) and kv heads "
+                f"({cfg.num_kv_heads})")
+        if (ldef.ffn == "mlp" or ldef.shared) and cfg.d_ff % mp:
+            raise ValueError(f"model axis {mp} must divide d_ff ({cfg.d_ff})")
+        if ldef.ffn == "moe" and cfg.moe.num_experts % mp:
+            raise ValueError(f"model axis {mp} must divide num_experts "
+                             f"({cfg.moe.num_experts})")
+
+
+def tp_layer_specs(ldef: LayerDef, cfg: ModelConfig, dtype,
+                   axis: str = "model"):
+    """PartitionSpec tree for one layer's params with attention heads, d_ff
+    and experts sharded over ``axis`` (everything else replicated) — the
+    in_specs a manual shard_map stage feeds params through.  Structure
+    mirrors :func:`init_layer` exactly (built by replicating the init spec
+    tree, then overriding the shardable projections)."""
+    specs = jax.tree.map(lambda _: P(), layer_specs(ldef, cfg, dtype),
+                         is_leaf=lambda s: isinstance(s, P))
+    if ldef.mixer == "attn" and not ldef.shared:
+        specs["mixer"] = attn.tp_attention_specs(cfg, axis)
+    if ldef.mixer == "attn" and ldef.ffn == "mlp" and not ldef.shared:
+        specs["ffn"] = tp_mlp_specs(axis)
+    elif ldef.mixer == "attn" and ldef.ffn == "moe":
+        specs["ffn"]["wg"] = P(axis, None, None)   # expert dim -> model axis
+        specs["ffn"]["wu"] = P(axis, None, None)
+        specs["ffn"]["wd"] = P(axis, None, None)
+        # router (and the shared expert, when present) stay replicated: their
+        # outputs are full, so only the routed-expert partials get psum'd
+    return specs
+
+
+def tp_mlp_specs(axis: str = "model") -> dict:
+    return {"w_gate": P(None, axis), "w_up": P(None, axis),
+            "w_down": P(axis, None)}
+
+
+def tp_stage_specs(segments: Sequence[Segment], cfg: ModelConfig, dtype,
+                   axis: str = "model"):
+    """Spec tree matching :func:`init_segment` stacking for a whole stage
+    (leading repeats dim unsharded)."""
+    out = []
+    for seg in segments:
+        out.append([_prepend_none(tp_layer_specs(ldef, cfg, dtype, axis))
+                    for ldef in seg.unit])
+    return out
+
+
+# ---------------------------------------------------------------------------
 # per-layer init
 # ---------------------------------------------------------------------------
 
@@ -310,9 +379,9 @@ def init_layer_cache(ldef: LayerDef, cfg: ModelConfig, batch: int, length: int,
     raise ValueError(ldef.mixer)
 
 
-def layer_cache_spec(ldef: LayerDef, batch_axis, seq_axis):
+def layer_cache_spec(ldef: LayerDef, batch_axis, seq_axis, head_axis=None):
     if ldef.mixer == "attn":
-        c = {"kv": attn.kv_cache_spec(batch_axis, seq_axis)}
+        c = {"kv": attn.kv_cache_spec(batch_axis, seq_axis, head_axis)}
         if ldef.cross:
             c["cross_kv"] = attn.kv_cache_spec(batch_axis, None)
         return c
@@ -362,7 +431,9 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
                 use_kernel=use_kernel, causal=causal, rope=rope)
             if mode == "prefill":
                 new_cache = {"kv": to_ring(kv, ldef.window) if ldef.window else kv}
-        x = x + out
+        # tensor-parallel stages: wo is row-sharded, so `out` is this model
+        # rank's partial sum (the kv cache stays a local whole-head slice)
+        x = x + model_psum(out, pctx)
         if ldef.cross:
             hc = rms_norm(x, p["norm_cross"], cfg.rms_eps)
             if mode == "decode":
@@ -377,7 +448,8 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
         if ldef.ffn is not None:
             h2 = rms_norm(x, p["norm2"], cfg.rms_eps)
             if ldef.ffn == "mlp":
-                x = x + apply_mlp(p["ffn"], h2, cfg.act)
+                # w_down row-sharded under tensor parallelism -> partial out
+                x = x + model_psum(apply_mlp(p["ffn"], h2, cfg.act), pctx)
             else:
                 out, moe_aux = moe_lib.apply_moe(p["ffn"], h2, cfg=cfg,
                                                  pctx=pctx, act=cfg.act)
@@ -477,12 +549,16 @@ def init_stage_cache(segments: List[Segment], cfg, batch, length, dtype):
     return out
 
 
-def stage_cache_spec(segments: List[Segment], batch_axis, seq_axis):
+def stage_cache_spec(segments: List[Segment], batch_axis, seq_axis,
+                     head_axis=None):
+    """``head_axis`` shards attention kv-head dims (tensor-parallel stages);
+    recurrent mixer state has no head-sharded decomposition here and stays
+    replicated."""
     out = []
     for seg in segments:
         unit = []
         for ldef in seg.unit:
-            s = layer_cache_spec(ldef, batch_axis, seq_axis)
+            s = layer_cache_spec(ldef, batch_axis, seq_axis, head_axis)
             unit.append(_prepend_none(s))
         out.append(unit)
     return out

@@ -161,8 +161,11 @@ class EdgeDevice:
             # device, reused across its serial requests
             if self._local_engine is None:
                 runner = self.bank.runner(self.numerics_split)
+                # this engine lives on the DEVICE: run it at the edge degree
+                # so mobile-only mode never builds the cloud's mesh
                 self._local_engine = runner.make_engine(
-                    max_batch=1, max_len=self.server.max_len)
+                    max_batch=1, max_len=self.server.max_len,
+                    mp=runner.edge_mp)
             eng = self._local_engine
             req.engine_req = eng.submit(req.tokens,
                                         max_new_tokens=req.max_new_tokens)

@@ -40,10 +40,15 @@ class AdaptiveSplitController:
                  transport_mode: str = "cache_handoff",
                  new_tokens: int = 1,
                  set_transport: Optional[Callable[[str], None]] = None,
-                 get_transport: Optional[Callable[[], str]] = None):
+                 get_transport: Optional[Callable[[], str]] = None,
+                 edge_mp: int = 1, cloud_mp: int = 1):
         assert transport_mode in ("cache_handoff", "streamed", "auto"), \
             transport_mode
         self.handoff_bytes_per_layer = handoff_bytes_per_layer
+        # score with the same model-axis degrees the CostModel charges, so
+        # the controller's picks stay consistent with simulated durations
+        self.edge_mp = edge_mp
+        self.cloud_mp = cloud_mp
         self.loop = loop
         self.uplink = uplink
         self.cloud_load = cloud_load
@@ -88,7 +93,8 @@ class AdaptiveSplitController:
             objective=self.objective,
             transports=transports, new_tokens=self.new_tokens,
             downlink_bytes_per_s=self.uplink.observed_down_bytes_per_s(now),
-            downlink_energy_mj_per_byte=self.uplink.downlink_energy_mj(1.0))
+            downlink_energy_mj_per_byte=self.uplink.downlink_energy_mj(1.0),
+            edge_mp=self.edge_mp, cloud_mp=self.cloud_mp)
         old = self.get_split()
         self.telemetry.record_decision(ControlDecision(
             t=now, cloud_load=load, link_bytes_per_s=link_bps,

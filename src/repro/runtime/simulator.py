@@ -98,6 +98,12 @@ class SimConfig:
     candidate_splits: Optional[Sequence[int]] = None
     edge: HardwareProfile = JETSON_TX2
     cloud: HardwareProfile = GTX_1080TI
+    # model-axis degree of each half's stage (DESIGN.md section 11): timing
+    # divides by the degree, and in numerics mode the bank's jitted halves
+    # really run shard_map'd over that many local devices (heterogeneous
+    # edge=1 / cloud=N is the expected shape)
+    edge_mp: int = 1
+    cloud_mp: int = 1
     background_load: Optional[Callable[[float], float]] = None
     adapt: bool = False
     control_interval_s: float = 0.05
@@ -132,8 +138,10 @@ class Simulation:
         assert c.initial_split in self.candidates, \
             f"initial split {c.initial_split} not in {self.candidates}"
         self.bank = SplitModelBank(base, c.d_r, wire_mode=c.wire_mode,
-                                   seed=c.seed) if c.numerics else None
-        self.cost = CostModel(base, c.edge, c.cloud)
+                                   seed=c.seed, edge_mp=c.edge_mp,
+                                   cloud_mp=c.cloud_mp) if c.numerics else None
+        self.cost = CostModel(base, c.edge, c.cloud, edge_mp=c.edge_mp,
+                              cloud_mp=c.cloud_mp)
         self._remaining = c.num_requests
         self.server = CloudServer(
             loop=self.loop, cost=self.cost, bank=self.bank, mode=c.mode,
@@ -170,7 +178,8 @@ class Simulation:
                 transport_mode=c.transport,
                 new_tokens=c.max_new_tokens,
                 set_transport=self._set_transport,
-                get_transport=lambda: self.current_transport)
+                get_transport=lambda: self.current_transport,
+                edge_mp=c.edge_mp, cloud_mp=c.cloud_mp)
 
     # ------------------------------------------------------------------ api
     def run(self) -> Telemetry:

@@ -30,7 +30,7 @@ butterfly (DESIGN.md section 8.6) — the bank's compile cache grows per-token
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core import costs
 from repro.core.planner import wire_mode_bytes
@@ -54,39 +54,52 @@ def input_bytes(cfg, seq: int) -> float:
 
 @dataclass(frozen=True)
 class CostModel:
+    """``edge_mp``/``cloud_mp`` — model-axis degree each half's stage is
+    sharded over (DESIGN.md section 11): per-stage estimates divide by the
+    degree via :func:`costs.model_parallel_share` (heterogeneous fleets run
+    edge_mp=1 against a wide cloud)."""
     cfg: object
     edge: HardwareProfile
     cloud: HardwareProfile
+    edge_mp: int = 1
+    cloud_mp: int = 1
+
+    def _where(self, where: str):
+        if where == "edge":
+            return self.edge, self.edge_mp
+        return self.cloud, self.cloud_mp
 
     def _roofline(self, hw: HardwareProfile, flops: float,
-                  load: float = 0.0) -> float:
+                  load: float = 0.0, mp: int = 1) -> float:
         nbytes = flops / max(self.cfg.d_model, 1)      # planner's bytes proxy
+        flops, nbytes = costs.model_parallel_share((flops, nbytes), mp)
         return hw.latency_s(flops, nbytes) / max(1e-9, 1.0 - load)
 
     def edge_prefill_s(self, split: int, seq: int, d_r: int) -> float:
         f = costs.stack_flops(self.cfg, seq, 0, split)
         f += 2 * seq * self.cfg.d_model * d_r          # reduction unit
-        return self._roofline(self.edge, f)
+        return self._roofline(self.edge, f, mp=self.edge_mp)
 
     def cloud_prefill_s(self, split: int, seq: int, d_r: int,
                         load: float = 0.0) -> float:
         f = costs.stack_flops(self.cfg, seq, split, self.cfg.num_layers)
         f += 2 * seq * d_r * self.cfg.d_model          # restoration unit
         f += costs.embed_flops(self.cfg, seq)
-        return self._roofline(self.cloud, f, load)
+        return self._roofline(self.cloud, f, load, mp=self.cloud_mp)
 
     def full_prefill_s(self, seq: int, *, where: str,
                        load: float = 0.0) -> float:
         f = costs.stack_flops(self.cfg, seq, 0, self.cfg.num_layers)
         f += costs.embed_flops(self.cfg, seq)
-        hw = self.edge if where == "edge" else self.cloud
-        return self._roofline(hw, f, load)
+        hw, mp = self._where(where)
+        return self._roofline(hw, f, load, mp=mp)
 
     def decode_step_s(self, batch: int, *, where: str,
                       load: float = 0.0) -> float:
         # decode is weight-bound: every step streams the full parameter set
-        f, nbytes = costs.full_decode_step_cost(self.cfg, batch)
-        hw = self.edge if where == "edge" else self.cloud
+        hw, mp = self._where(where)
+        f, nbytes = costs.model_parallel_share(
+            costs.full_decode_step_cost(self.cfg, batch), mp)
         return hw.latency_s(f, nbytes) / max(1e-9, 1.0 - load)
 
     def edge_energy_mj(self, seconds: float) -> float:
@@ -95,14 +108,17 @@ class CostModel:
     def edge_decode_step_s(self, split: int, d_r: int) -> float:
         """One streamed-decode edge step: embed + layers [0, split) +
         reduce/quantize for a single token."""
-        f, b = costs.edge_decode_step_cost(self.cfg, split, d_r)
+        f, b = costs.model_parallel_share(
+            costs.edge_decode_step_cost(self.cfg, split, d_r), self.edge_mp)
         return self.edge.latency_s(f, b)
 
     def cloud_decode_step_s(self, split: int, d_r: int, batch: int = 1,
                             load: float = 0.0) -> float:
         """One streamed-decode cloud turn: restore + layers [split, N) +
         unembed for ``batch`` arrived rows."""
-        f, b = costs.cloud_decode_step_cost(self.cfg, split, d_r, batch)
+        f, b = costs.model_parallel_share(
+            costs.cloud_decode_step_cost(self.cfg, split, d_r, batch),
+            self.cloud_mp)
         return self.cloud.latency_s(f, b) / max(1e-9, 1.0 - load)
 
     def stream_row_bytes(self, wire_mode: str, d_r: int) -> float:
@@ -155,10 +171,19 @@ class SplitModelBank:
     picks among them; here the M models are in-graph slices of a single
     stacked parameter set, so materialising more candidates costs only the
     per-split butterfly projections (d*d_r + d_r*d params each) plus compile
-    cache entries — not O(num_layers) full parameter copies."""
+    cache entries — not O(num_layers) full parameter copies.
+
+    ``edge_mp``/``cloud_mp`` set the default model-axis degree each half's
+    jitted functions run at (DESIGN.md section 11): degree > 1 wraps the
+    half in a shard_map over a ``("model",)`` sub-mesh of the first N local
+    devices with attention heads / d_ff / experts sharded tensor-parallel
+    and kv caches kept as per-rank head slices.  Runners may override per
+    half (heterogeneous edge=1, cloud=N), and the compile cache keys on the
+    mesh shape — two meshes on one bank never share a jitted step."""
 
     def __init__(self, base_cfg, d_r: int, *, wire_bits: int = 8,
-                 wire_mode: str = "int8", seed: int = 0):
+                 wire_mode: str = "int8", seed: int = 0,
+                 edge_mp: int = 1, cloud_mp: int = 1):
         import jax
         import jax.numpy as jnp
 
@@ -175,6 +200,9 @@ class SplitModelBank:
         self.wire_bits = wire_bits
         self.wire_mode = wire_mode
         self.seed = seed
+        self.edge_mp = int(edge_mp)
+        self.cloud_mp = int(cloud_mp)
+        self._meshes: Dict[int, object] = {}          # mp -> ("model",) Mesh
 
         # THE one backbone init (regardless of how many splits materialize)
         self.built = M.build(base_cfg)
@@ -198,10 +226,14 @@ class SplitModelBank:
         self._kernel_wire_ok = wire_bits <= 8
 
         self._butterfly: Dict[int, dict] = {}
-        self._runners: Dict[int, "SplitRunner"] = {}
-        self._fns: Dict[Tuple[str, int], object] = {}     # compile cache
+        # runner key: (split, edge_mp, cloud_mp); fn key: (kind, split, mp) —
+        # the mesh shape is part of the compile-cache key, so two meshes on
+        # one bank never alias a jitted step (and the engine's weak-keyed
+        # sampling-step cache sees distinct closures per mesh)
+        self._runners: Dict[Tuple[int, int, int], "SplitRunner"] = {}
+        self._fns: Dict[Tuple[str, int, int], object] = {}  # compile cache
         self._cache_templates: Dict[Tuple[int, int, int, int], object] = {}
-        self.jit_cache_keys: set = set()   # (kind, split, B_bucket, S_bucket)
+        self.jit_cache_keys: set = set()  # (kind, split, mp, B_bkt, S_bkt)
 
     # ------------------------------------------------------------------ api
     @property
@@ -219,11 +251,42 @@ class SplitModelBank:
         expert-capacity pool couples the batch)."""
         return self._batch_bucket_ok
 
-    def runner(self, split: int) -> "SplitRunner":
-        if split not in self._runners:
+    def runner(self, split: int, *, edge_mp: Optional[int] = None,
+               cloud_mp: Optional[int] = None) -> "SplitRunner":
+        """Facade for one candidate split; ``edge_mp``/``cloud_mp`` override
+        the bank defaults so heterogeneous halves (edge=1, cloud=N) share
+        the same backbone."""
+        from repro.models import transformer as tfm
+        edge_mp = self.edge_mp if edge_mp is None else int(edge_mp)
+        cloud_mp = self.cloud_mp if cloud_mp is None else int(cloud_mp)
+        key = (split, edge_mp, cloud_mp)
+        if key not in self._runners:
             assert 0 < split < self.base_cfg.num_layers, split
-            self._runners[split] = SplitRunner(self, split)
-        return self._runners[split]
+            for mp in {edge_mp, cloud_mp}:
+                tfm.check_tp_divisibility(self._defs, self.base_cfg, mp)
+            self._runners[key] = SplitRunner(self, split, edge_mp=edge_mp,
+                                             cloud_mp=cloud_mp)
+        return self._runners[key]
+
+    def mp_mesh(self, mp: int):
+        """The ``("model",)`` sub-mesh of degree ``mp`` over the first mp
+        local devices (None for degree 1 — the plain-jit path)."""
+        if mp <= 1:
+            return None
+        if mp not in self._meshes:
+            import jax
+            import numpy as np
+            assert len(jax.devices()) >= mp, \
+                f"model-axis degree {mp} needs >= {mp} devices " \
+                f"(have {len(jax.devices())}; set " \
+                f"--xla_force_host_platform_device_count on CPU)"
+            self._meshes[mp] = jax.sharding.Mesh(
+                np.array(jax.devices()[:mp]), ("model",))
+        return self._meshes[mp]
+
+    def _pctx(self, mp: int):
+        from repro.models.parallel import manual_context
+        return manual_context(self.mp_mesh(mp))
 
     def butterfly_params(self, split: int) -> dict:
         if split not in self._butterfly:
@@ -307,31 +370,59 @@ class SplitModelBank:
         return dequantize(codes, scales, x.dtype) @ bf["w_restore"]
 
     # --------------------------------------------------- jitted core factory
-    def _fn(self, kind: str, split: int):
-        key = (kind, split)
+    def _fn(self, kind: str, split: int, mp: int = 1):
+        key = (kind, split, mp)
         if key not in self._fns:
-            self._fns[key] = getattr(self, f"_make_{kind}")(split)
+            self._fns[key] = getattr(self, f"_make_{kind}")(split, mp)
         return self._fns[key]
 
-    def _stage_ctx(self):
+    def _stage_ctx(self, mp: int = 1):
         from repro.models.common import embed, rms_norm, unembed
-        from repro.models.parallel import LOCAL
         cfg = self.base_cfg
         segs = list(self.built.stages[0])
         scale = cfg.arch_type == "dense" and cfg.act == "gelu"
-        return cfg, segs, scale, embed, rms_norm, unembed, LOCAL
+        return cfg, segs, scale, embed, rms_norm, unembed, self._pctx(mp)
 
-    def _make_edge(self, split: int):
+    def _tp_specs(self):
+        if not hasattr(self, "_tp_specs_tree"):
+            self._tp_specs_tree = self._M.tp_param_specs(self.built,
+                                                         with_butterfly=True)
+        return self._tp_specs_tree
+
+    def _cache_spec_tree(self, stage: int, split: int):
+        """Spec tree of stage ``stage``'s range cache under a model mesh:
+        attention kv-head dims shard with their head slice; recurrent state
+        replicates."""
+        return self._tfm.stage_cache_spec(self.engine_stages(split)[stage],
+                                          None, None, head_axis="model")
+
+    def _mp_wrap(self, fn, mp: int, specs):
+        """shard_map ``fn`` over the degree-``mp`` model mesh (identity for
+        mp == 1, keeping single-degree callers on the exact plain-jit path).
+        ``specs`` is a zero-arg callable returning ``(in_specs, out_specs)``
+        — invoked only when a real mesh exists, because tensor-parallel spec
+        construction asserts arch support (e.g. no enc-dec) and must never
+        fire for degree-1 callers."""
+        mesh = self.mp_mesh(mp)
+        if mesh is None:
+            return fn
+        from repro import compat
+        in_specs, out_specs = specs()
+        return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=False)
+
+    def _make_edge(self, split: int, mp: int = 1):
         import jax
         import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
-        cfg, segs, scale, embed, _, _, LOCAL = self._stage_ctx()
+        cfg, segs, scale, embed, _, _, pctx = self._stage_ctx(mp)
         tfm, wm = self._tfm, self.wire_mode
 
         def edge(params, toks):
             x = embed(params["embed"], toks, scale=scale)
             x, cache0, _ = tfm.apply_layer_range(
-                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=pctx,
                 mode="prefill", range_cache=None, pos=None,
                 shared_params=params.get("shared_attn"))
             if wm == "raw":
@@ -348,13 +439,17 @@ class SplitModelBank:
                                          self.wire_bits)
             return codes, scales, cache0
 
+        edge = self._mp_wrap(
+            edge, mp, lambda: ((self._tp_specs(), P()),
+                               (P(), P(), self._cache_spec_tree(0, split))))
         return jax.jit(edge)
 
-    def _make_cloud(self, split: int):
+    def _make_cloud(self, split: int, mp: int = 1):
         import jax
         import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
-        cfg, segs, _, _, rms_norm, unembed, LOCAL = self._stage_ctx()
+        cfg, segs, _, _, rms_norm, unembed, pctx = self._stage_ctx(mp)
         tfm, wm, dt = self._tfm, self.wire_mode, self._dt
 
         def cloud(params, payload, scales, length):
@@ -372,79 +467,96 @@ class SplitModelBank:
                     params["butterfly"]["w_restore"]
             x, cache1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
-                pctx=LOCAL, mode="prefill", range_cache=None, pos=None,
+                pctx=pctx, mode="prefill", range_cache=None, pos=None,
                 shared_params=params.get("shared_attn"))
             x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
             x = rms_norm(x, params["final_norm"], cfg.rms_eps)
             table = params["embed"] if cfg.tie_embeddings else params["head"]
             return unembed(table, x, cfg.logit_softcap)[:, 0], cache1
 
+        cloud = self._mp_wrap(
+            cloud, mp, lambda: ((self._tp_specs(), P(), P(), P()),
+                                (P(), self._cache_spec_tree(1, split))))
         return jax.jit(cloud)
 
-    def _make_prefill(self, split: int):
+    def _make_prefill(self, split: int, mp: int = 1):
         """Full hosted-model prefill (both halves + the wire, one graph):
         the engine path for cloud-only / mobile-only serving."""
         import jax
-        cfg, segs, scale, embed, rms_norm, unembed, LOCAL = self._stage_ctx()
+        from jax.sharding import PartitionSpec as P
+        cfg, segs, scale, embed, rms_norm, unembed, pctx = self._stage_ctx(mp)
         tfm = self._tfm
 
         def prefill(params, toks, length):
             x = embed(params["embed"], toks, scale=scale)
             x, cache0, _ = tfm.apply_layer_range(
-                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=pctx,
                 mode="prefill", range_cache=None, pos=None,
                 shared_params=params.get("shared_attn"))
             x = self._wire_ingraph(params["butterfly"], x, use_kernel=True)
             x, cache1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
-                pctx=LOCAL, mode="prefill", range_cache=None, pos=None,
+                pctx=pctx, mode="prefill", range_cache=None, pos=None,
                 shared_params=params.get("shared_attn"))
             x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
             x = rms_norm(x, params["final_norm"], cfg.rms_eps)
             table = params["embed"] if cfg.tie_embeddings else params["head"]
             return unembed(table, x, cfg.logit_softcap), [cache0, cache1]
 
+        prefill = self._mp_wrap(
+            prefill, mp,
+            lambda: ((self._tp_specs(), P(), P()),
+                     (P(), [self._cache_spec_tree(0, split),
+                            self._cache_spec_tree(1, split)])))
         return jax.jit(prefill)
 
-    def _make_decode(self, split: int):
+    def _make_decode(self, split: int, mp: int = 1):
         """Batched hosted-model decode step for the ServingEngine: fixed
         (max_batch, 1) shapes, ragged per-slot positions, the wire via the
         fused kernels' (B, 1, d) fast path.  NOT jit-wrapped here — the
         engine folds sampling into the same jitted step."""
-        cfg, segs, scale, embed, rms_norm, unembed, LOCAL = self._stage_ctx()
+        from jax.sharding import PartitionSpec as P
+        cfg, segs, scale, embed, rms_norm, unembed, pctx = self._stage_ctx(mp)
         tfm = self._tfm
 
         def decode(params, tokens, caches, pos):
             x = embed(params["embed"], tokens, scale=scale)
             x, nc0, _ = tfm.apply_layer_range(
-                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=pctx,
                 mode="decode", range_cache=caches[0], pos=pos,
                 shared_params=params.get("shared_attn"))
             x = self._wire_ingraph(params["butterfly"], x, use_kernel=True)
             x, nc1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
-                pctx=LOCAL, mode="decode", range_cache=caches[1], pos=pos,
+                pctx=pctx, mode="decode", range_cache=caches[1], pos=pos,
                 shared_params=params.get("shared_attn"))
             x = rms_norm(x, params["final_norm"], cfg.rms_eps)
             table = params["embed"] if cfg.tie_embeddings else params["head"]
             return unembed(table, x, cfg.logit_softcap), [nc0, nc1]
 
-        return decode
+        def specs():
+            cache_specs = [self._cache_spec_tree(0, split),
+                           self._cache_spec_tree(1, split)]
+            return ((self._tp_specs(), P(), cache_specs, P()),
+                    (P(), cache_specs))
 
-    def _make_edge_step(self, split: int):
+        return self._mp_wrap(decode, mp, specs)
+
+    def _make_edge_step(self, split: int, mp: int = 1):
         """Streamed-decode edge half: embed one token, run layers [0, split)
         against the edge-resident stage-0 decode cache, emit one wire row —
         the per-token payload that replaces the stage-0 cache handoff."""
         import jax
         import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
-        cfg, segs, scale, embed, _, _, LOCAL = self._stage_ctx()
+        cfg, segs, scale, embed, _, _, pctx = self._stage_ctx(mp)
         tfm, wm = self._tfm, self.wire_mode
 
         def edge_step(params, tok, cache0, pos):
             x = embed(params["embed"], tok, scale=scale)
             x, nc0, _ = tfm.apply_layer_range(
-                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=LOCAL,
+                segs, params["stages"][0], x, 0, split, cfg=cfg, pctx=pctx,
                 mode="decode", range_cache=cache0, pos=pos,
                 shared_params=params.get("shared_attn"))
             if wm == "raw":
@@ -461,16 +573,22 @@ class SplitModelBank:
                                          self.wire_bits)
             return codes, scales, nc0
 
+        def specs():
+            spec0 = self._cache_spec_tree(0, split)
+            return ((self._tp_specs(), P(), spec0, P()), (P(), P(), spec0))
+
+        edge_step = self._mp_wrap(edge_step, mp, specs)
         return jax.jit(edge_step)
 
-    def _make_cloud_step(self, split: int):
+    def _make_cloud_step(self, split: int, mp: int = 1):
         """Streamed-decode cloud half: restore one arrived row and run layers
         [split, N) against the cloud-resident stage-1 decode cache.  NOT
         jit-wrapped here — the engine folds sampling into the same jitted
         step (serving/engine._sampled_stream_step), shared by every engine of
         this split."""
+        from jax.sharding import PartitionSpec as P
         from repro.kernels import ops as kops
-        cfg, segs, _, _, rms_norm, unembed, LOCAL = self._stage_ctx()
+        cfg, segs, _, _, rms_norm, unembed, pctx = self._stage_ctx(mp)
         tfm, wm, dt = self._tfm, self.wire_mode, self._dt
 
         def cloud_step(params, payload, scales, cache1, pos):
@@ -488,23 +606,35 @@ class SplitModelBank:
                     params["butterfly"]["w_restore"]
             x, nc1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
-                pctx=LOCAL, mode="decode", range_cache=cache1, pos=pos,
+                pctx=pctx, mode="decode", range_cache=cache1, pos=pos,
                 shared_params=params.get("shared_attn"))
             x = rms_norm(x, params["final_norm"], cfg.rms_eps)
             table = params["embed"] if cfg.tie_embeddings else params["head"]
             return unembed(table, x, cfg.logit_softcap), nc1
 
-        return cloud_step
+        def specs():
+            spec1 = self._cache_spec_tree(1, split)
+            return ((self._tp_specs(), P(), P(), spec1, P()), (P(), spec1))
+
+        return self._mp_wrap(cloud_step, mp, specs)
 
 
 class SplitRunner:
     """Thin facade over the bank's shared backbone + compile cache for one
     candidate split.  ``runner.params`` shares every backbone leaf with
-    ``bank.params`` (only the per-split butterfly differs)."""
+    ``bank.params`` (only the per-split butterfly differs).
 
-    def __init__(self, bank: SplitModelBank, split: int):
+    ``edge_mp``/``cloud_mp`` pick each half's model-axis degree: the edge
+    half (edge/edge_step) and the cloud half (cloud/cloud_step, plus the
+    full-model prefill/decode the cloud engines run) resolve through the
+    bank's compile cache under their own mesh shape."""
+
+    def __init__(self, bank: SplitModelBank, split: int, *, edge_mp: int = 1,
+                 cloud_mp: int = 1):
         self.bank = bank
         self.split = split
+        self.edge_mp = int(edge_mp)
+        self.cloud_mp = int(cloud_mp)
         self.cfg = bank.base_cfg.with_butterfly(split, bank.d_r,
                                                 bank.wire_bits)
         self.wire_mode = bank.wire_mode
@@ -523,9 +653,9 @@ class SplitRunner:
         toks = jnp.asarray(toks)
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
-        out = bank._fn("edge", self.split)(params,
-                                           bank._pad_toks(toks, Bb, Sb))
-        bank.jit_cache_keys.add(("edge", self.split, Bb, Sb))
+        out = bank._fn("edge", self.split, self.edge_mp)(
+            params, bank._pad_toks(toks, Bb, Sb))
+        bank.jit_cache_keys.add(("edge", self.split, self.edge_mp, Bb, Sb))
         payload, scales, cache0 = out
         return (payload[:B, :S], scales[:B, :S],
                 bank._slice_cache(cache0, 0, self.split, B, S))
@@ -542,9 +672,9 @@ class SplitRunner:
             pad = ((0, Bb - B), (0, Sb - S), (0, 0))
             payload = jnp.pad(payload, pad)
             scales = jnp.pad(jnp.asarray(scales), pad)
-        logits, cache1 = bank._fn("cloud", self.split)(
+        logits, cache1 = bank._fn("cloud", self.split, self.cloud_mp)(
             params, payload, scales, jnp.int32(S))
-        bank.jit_cache_keys.add(("cloud", self.split, Bb, Sb))
+        bank.jit_cache_keys.add(("cloud", self.split, self.cloud_mp, Bb, Sb))
         return logits[:B], bank._slice_cache(cache1, 1, self.split, B, S)
 
     # --------------------------------------------------------- streamed decode
@@ -557,9 +687,10 @@ class SplitRunner:
         import jax.numpy as jnp
         bank = self.bank
         tok = jnp.asarray(tok, jnp.int32)
-        out = bank._fn("edge_step", self.split)(
+        out = bank._fn("edge_step", self.split, self.edge_mp)(
             params, tok, cache0, jnp.asarray(pos, jnp.int32))
-        bank.jit_cache_keys.add(("edge_step", self.split, tok.shape[0], 1))
+        bank.jit_cache_keys.add(("edge_step", self.split, self.edge_mp,
+                                 tok.shape[0], 1))
         return out
 
     def stream_step(self, engine, req, cache, payload, scales, pos: int):
@@ -567,7 +698,8 @@ class SplitRunner:
         entry, with the bank's compile-cache bookkeeping (mirrors
         :meth:`edge_step`).  Returns ``(token, new_cache)``."""
         out = engine.stream_step(req, cache, payload, scales, pos)
-        self.bank.jit_cache_keys.add(("cloud_step", self.split, 1, 1))
+        self.bank.jit_cache_keys.add(("cloud_step", self.split, self.cloud_mp,
+                                      1, 1))
         return out
 
     def pad_decode_cache(self, cache, stage: int, length: int):
@@ -588,26 +720,37 @@ class SplitRunner:
         return jax.tree.map(pad, cache, template)
 
     # ------------------------------------------------------------- engine glue
-    def _engine_prefill(self, params, toks):
+    def _engine_prefill(self, params, toks, mp: Optional[int] = None):
         import jax.numpy as jnp
+        mp = self.cloud_mp if mp is None else mp
         bank = self.bank
         toks = jnp.asarray(toks)
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
-        logits, caches = bank._fn("prefill", self.split)(
+        logits, caches = bank._fn("prefill", self.split, mp)(
             params, bank._pad_toks(toks, Bb, Sb), jnp.int32(S))
-        bank.jit_cache_keys.add(("prefill", self.split, Bb, Sb))
+        bank.jit_cache_keys.add(("prefill", self.split, mp, Bb, Sb))
         return logits[:B], [bank._slice_cache(caches[0], 0, self.split, B, S),
                             bank._slice_cache(caches[1], 1, self.split, B, S)]
 
-    def make_engine(self, *, max_batch: int, max_len: int, seed: int = 0):
+    def make_engine(self, *, max_batch: int, max_len: int, seed: int = 0,
+                    mp: Optional[int] = None):
+        """``mp`` — model-axis degree of the engine's whole-model
+        prefill/decode steps.  Defaults to the runner's cloud degree (the
+        engines live on the cloud server); the mobile-only baseline passes
+        its edge degree so an edge-resident engine never compiles — or
+        demands the devices of — the cloud's mesh."""
+        from functools import partial
+
         from repro.serving.engine import ServingEngine
+        mp = self.cloud_mp if mp is None else int(mp)
         return ServingEngine(self.params, self.built, max_batch=max_batch,
                              max_len=max_len, seed=seed,
                              stages=self.bank.engine_stages(self.split),
-                             prefill_fn=self._engine_prefill,
-                             decode_fn=self.bank._fn("decode", self.split),
-                             stream_fn=self.bank._fn("cloud_step", self.split))
+                             prefill_fn=partial(self._engine_prefill, mp=mp),
+                             decode_fn=self.bank._fn("decode", self.split, mp),
+                             stream_fn=self.bank._fn("cloud_step", self.split,
+                                                     mp))
 
     # --------------------------------------------------------------- reference
     def reference_prefill(self, toks):

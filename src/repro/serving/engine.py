@@ -14,6 +14,13 @@ The engine's forward functions are pluggable: the split runtime's
 ``SplitModelBank`` supplies jitted prefill/decode closures over the shared
 backbone (one compile per split, shared by every engine of that split);
 stand-alone engines default to the single-mesh ``models.model`` forwards.
+Model-parallel stages thread through the same seam (DESIGN.md section 11):
+a bank closure compiled for a ``(model,)`` mesh arrives as a distinct
+callable per mesh shape, so the weak-keyed ``_STEP_FNS``/``_STREAM_STEP_FNS``
+caches below — keyed on closure identity — can never hand a step compiled
+for one mesh to an engine running another; the cache pool itself stays a
+global-shape pytree (shard_map assembles/splits the kv-head shards at the
+closure boundary).
 For the streamed decode transport the engine adds a single-slot entry
 (``submit_streamed`` + ``stream_step``): the request holds no cache-pool
 slot — its cloud-side stage cache lives with the caller — and each arrived

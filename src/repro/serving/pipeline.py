@@ -9,10 +9,19 @@ pod 1 ("cloud") dequantizes, restores, runs layers [j, N) and the LM head,
 and the last-token logits ride the same ppermute back ("the inference
 outcome is sent back to the mobile device").
 
+Within a pod, stages are model-parallel (DESIGN.md section 11): when the
+mesh carries a ``model`` axis, attention heads / d_ff columns / MoE experts
+shard over it Megatron-style and each layer's partial outputs psum over
+``model`` — so the "significant computational load on the cloud server"
+spreads across the pod's devices while the *only* tensor crossing the pod
+axis is still the compressed ``(mb, S, d_r)`` wire.  MoE configs run
+expert-parallel inside the 2-pod split (each model rank owns E/mp experts,
+``models/moe.py`` manual path).  With no ``model`` axis (or size 1) the
+stage params replicate exactly as before.
+
 Scope: scoring/prefill pipeline (the paper's single-forward inference),
-dense/ssm/hybrid archs; params are replicated within a stage (the edge-side
-model is small by construction — that is the paper's point).  Model-parallel
-stages and decode pipelining are listed as extensions in DESIGN.md.
+dense/ssm/hybrid/MoE archs; decode pipelining is listed as an extension in
+DESIGN.md.
 """
 from __future__ import annotations
 
@@ -28,7 +37,7 @@ from repro.core.quantization import dequantize, quantize
 from repro.models import model as M
 from repro.models import transformer as tfm
 from repro.models.common import embed, rms_norm, unembed
-from repro.models.parallel import LOCAL
+from repro.models.parallel import LOCAL, manual_context
 
 
 def wire_stats(cfg, microbatch: int, seq: int) -> dict:
@@ -42,13 +51,27 @@ def wire_stats(cfg, microbatch: int, seq: int) -> dict:
             "compression": raw / wire}
 
 
+def pipeline_param_specs(built: M.BuiltModel, mp: int):
+    """PartitionSpec pytree (a prefix of the params tree) for the pipeline's
+    shard_map: stage layers shard over the ``model`` axis per the tensor-
+    parallel rules, everything else (embeddings, norms, butterfly, LM head)
+    replicates.  ``mp == 1`` returns a bare ``P()`` — the fully replicated
+    prefix, bit-identical to the pre-model-parallel pipeline."""
+    if mp <= 1:
+        return P()
+    return M.tp_param_specs(built)
+
+
 def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
                         seq_len: int, microbatch: int,
                         wire_mode: str = "int8"):
     """Returns jit-able ``pipeline_fn(params, tokens) -> last-token logits``.
 
     tokens: (num_microbatches * microbatch, seq_len) int32, sharded over the
-    'data' axis on the batch dim; requires a 'pod' axis of size 2.
+    'data' axis on the batch dim; requires a 'pod' axis of size 2.  An
+    optional 'model' axis makes each stage tensor-parallel within its pod
+    (heads/d_ff/experts must divide the axis — see
+    ``transformer.check_tp_divisibility``).
 
     wire_mode — what crosses the pod boundary (the perf-iteration knob):
       "raw"     vanilla collaborative intelligence: the full (mb, S, d_model)
@@ -59,9 +82,14 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
     cfg = built.cfg
     assert built.has_butterfly and len(built.stages) == 2, \
         "pipeline needs a butterfly split (cfg.with_butterfly(...))"
-    assert cfg.moe is None, "MoE pipeline stages are a documented extension"
+    assert not cfg.is_encdec, "enc-dec archs are out of pipeline scope"
     n_pods = mesh.shape["pod"]
     assert n_pods == 2, "2-stage pipeline: edge pod + cloud pod"
+    axes = mesh.axis_names
+    mp = int(mesh.shape["model"]) if "model" in axes else 1
+    tfm.check_tp_divisibility(tfm.build_layer_defs(cfg, built.long_mode),
+                              cfg, mp)
+    pctx = manual_context(mesh) if mp > 1 else LOCAL
     d_r = cfg.butterfly.d_r
     V = cfg.vocab_size
     d = cfg.d_model
@@ -75,7 +103,7 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
         x = embed(params["embed"], toks, scale=scale)
         x, _, _ = tfm.apply_stage(
             list(built.stages[0]), params["stages"][0], x, cfg=cfg,
-            pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+            pctx=pctx, mode="train", stage_cache=None, pos=None,
             shared_params=params.get("shared_attn"))
         if wire_mode == "raw":
             return x, jnp.zeros((x.shape[0], seq_len, 1), jnp.float32)
@@ -90,7 +118,7 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
             x = codes
             x, _, _ = tfm.apply_stage(
                 list(built.stages[1]), params["stages"][1], x, cfg=cfg,
-                pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+                pctx=pctx, mode="train", stage_cache=None, pos=None,
                 shared_params=params.get("shared_attn"))
             x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
             table = params["embed"] if cfg.tie_embeddings else params["head"]
@@ -99,7 +127,7 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
         x = r @ params["butterfly"]["w_restore"]
         x, _, _ = tfm.apply_stage(
             list(built.stages[1]), params["stages"][1], x, cfg=cfg,
-            pctx=LOCAL, mode="train", stage_cache=None, pos=None,
+            pctx=pctx, mode="train", stage_cache=None, pos=None,
             shared_params=params.get("shared_attn"))
         x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
         table = params["embed"] if cfg.tie_embeddings else params["head"]
@@ -123,6 +151,9 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
         def tick(t, carry):
             recv_codes, recv_scales, out, back = carry
 
+            # each branch runs only on its pod's ranks; the model-axis psums
+            # inside the stages reduce within the pod (disjoint replica
+            # groups per pod), so neither branch communicates across pods
             def edge(_):
                 i = jnp.clip(t, 0, Mmb - 1)
                 toks = jax.lax.dynamic_index_in_dim(mb_toks, i, 0, False)
@@ -152,11 +183,10 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
         result = jnp.where(pod == 0, back, out)
         return result[None]                                  # add pod dim
 
-    axes = mesh.axis_names
     data_ax = "data" if "data" in axes else None
     fn = compat.shard_map(
         shard_body, mesh=mesh,
-        in_specs=(P(), P(data_ax, None)),
+        in_specs=(pipeline_param_specs(built, mp), P(data_ax, None)),
         out_specs=P("pod", None, data_ax, None),
         check_vma=False,
     )

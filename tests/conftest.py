@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # src layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -15,3 +17,51 @@ jax.config.update("jax_enable_x64", False)
 
 def pytest_report_header(config):
     return f"jax {jax.__version__}, devices={jax.device_count()}"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--forbid-skips", action="store_true", default=False,
+        help="turn every skipped test into a failure.  The CI multi-device "
+             "job uses this so the sharded tests provably RUN instead of "
+             "silently skipping on a 1-device runner.")
+
+
+_FORBID_SKIPS = False
+
+
+def pytest_configure(config):
+    global _FORBID_SKIPS
+    _FORBID_SKIPS = config.getoption("--forbid-skips")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    rep = outcome.get_result()
+    if rep.skipped and item.config.getoption("--forbid-skips"):
+        rep.outcome = "failed"
+        rep.longrepr = (f"{item.nodeid}: skipped under --forbid-skips "
+                        f"(original reason: {rep.longrepr})")
+
+
+_COLLECT_SKIPS = []
+
+
+def pytest_collectreport(report):
+    # module/collection-level skips (pytest.importorskip, allow_module_level)
+    # never reach pytest_runtest_makereport — without these hooks they would
+    # green-skip straight past --forbid-skips
+    if _FORBID_SKIPS and report.skipped:
+        _COLLECT_SKIPS.append(f"{report.nodeid}: {report.longrepr}")
+
+
+def pytest_terminal_summary(terminalreporter):
+    for entry in _COLLECT_SKIPS:
+        terminalreporter.write_line(
+            f"collection skipped under --forbid-skips: {entry}", red=True)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _COLLECT_SKIPS and session.exitstatus == 0:
+        session.exitstatus = 1

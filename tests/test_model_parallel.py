@@ -1,0 +1,137 @@
+"""Model-parallel stage plumbing that runs on ONE device: cost-model /
+planner degree accounting, the bank's mesh-shape compile-cache keys, and the
+timing-only simulator knobs.  Real multi-device numerics live in
+tests/test_mesh_parity_subprocess.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import select_split_online
+from repro.core.profiler import GTX_1080TI, JETSON_TX2
+from repro.models import transformer as tfm
+from repro.runtime.simulator import SimConfig, run_sim
+from repro.runtime.split_exec import CostModel, SplitModelBank
+
+
+def _cfg():
+    return get_config("qwen3-8b").reduced()
+
+
+# ---------------------------------------------------------------------------
+# per-stage estimates divide by the model-axis degree
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_divides_by_model_axis_degree():
+    cfg = _cfg()
+    base = CostModel(cfg, JETSON_TX2, GTX_1080TI)
+    mp = CostModel(cfg, JETSON_TX2, GTX_1080TI, edge_mp=2, cloud_mp=4)
+    assert mp.cloud_prefill_s(1, 32, 16) == \
+        pytest.approx(base.cloud_prefill_s(1, 32, 16) / 4)
+    assert mp.edge_prefill_s(1, 32, 16) == \
+        pytest.approx(base.edge_prefill_s(1, 32, 16) / 2)
+    assert mp.full_prefill_s(32, where="edge") == \
+        pytest.approx(base.full_prefill_s(32, where="edge") / 2)
+    assert mp.full_prefill_s(32, where="cloud") == \
+        pytest.approx(base.full_prefill_s(32, where="cloud") / 4)
+    assert mp.decode_step_s(2, where="cloud") == \
+        pytest.approx(base.decode_step_s(2, where="cloud") / 4)
+    assert mp.edge_decode_step_s(1, 16) == \
+        pytest.approx(base.edge_decode_step_s(1, 16) / 2)
+    assert mp.cloud_decode_step_s(1, 16) == \
+        pytest.approx(base.cloud_decode_step_s(1, 16) / 4)
+    # wire accounting is degree-invariant: only compute shards
+    assert mp.payload_bytes("split", "int8", 32, 16, 1) == \
+        base.payload_bytes("split", "int8", 32, 16, 1)
+
+
+def test_planner_scores_match_model_parallel_cost_model():
+    """The controller's selection phase must derate cloud compute by the
+    same degree the simulator charges, or its picks drift from reality."""
+    cfg = _cfg()
+    kw = dict(candidate_splits=[1], edge=JETSON_TX2, cloud=GTX_1080TI,
+              link_bytes_per_s=1e6)
+    _, rows = select_split_online(cfg, 32, 16, **kw)
+    _, rows4 = select_split_online(cfg, 32, 16, cloud_mp=4, **kw)
+    assert rows4[0]["cloud_s"] == pytest.approx(rows[0]["cloud_s"] / 4)
+    assert rows4[0]["edge_s"] == pytest.approx(rows[0]["edge_s"])
+    assert rows4[0]["latency_s"] < rows[0]["latency_s"]
+
+
+def test_tp_divisibility_check():
+    cfg = _cfg()      # reduced: 4 heads, 2 kv heads
+    defs = tfm.build_layer_defs(cfg)
+    tfm.check_tp_divisibility(defs, cfg, 1)
+    tfm.check_tp_divisibility(defs, cfg, 2)
+    with pytest.raises(ValueError, match="kv heads"):
+        tfm.check_tp_divisibility(defs, cfg, 4)
+
+
+# ---------------------------------------------------------------------------
+# mesh-shape compile-cache keys (regression guard for the PR 2 step cache)
+# ---------------------------------------------------------------------------
+
+
+def test_bank_mesh_shape_is_a_compile_cache_dimension():
+    cfg = _cfg()
+    bank = SplitModelBank(cfg, d_r=8)
+    r = bank.runner(1)
+    assert bank.runner(1) is r
+    assert bank.runner(1, edge_mp=1, cloud_mp=1) is r
+    # a different requested mesh shape is a different runner AND a different
+    # compile-cache namespace — jitted steps must never alias across meshes
+    r2 = bank.runner(1, cloud_mp=2)
+    assert r2 is not r
+    fn = bank._fn("decode", 1, 1)
+    assert bank._fn("decode", 1, 1) is fn
+    prompt = np.zeros((1, 8), np.int32)
+    r.edge_half(r.params, prompt)
+    assert any(k[:3] == ("edge", 1, 1) for k in bank.jit_cache_keys), \
+        bank.jit_cache_keys
+
+
+def test_bank_degree_needs_devices():
+    """Asking for a model-axis degree beyond the local device count fails
+    loudly at mesh build, not with a silent wrong-mesh fallback."""
+    import jax
+    mp = 2                                # smallest power of two > devices
+    while mp <= jax.device_count():
+        mp *= 2
+    cfg = dataclasses.replace(_cfg(), num_heads=mp, num_kv_heads=mp)
+    if cfg.d_ff % mp:
+        pytest.skip(f"host exposes {jax.device_count()} devices; no "
+                    f"divisible over-subscribed degree to request")
+    bank = SplitModelBank(cfg, d_r=8)
+    bank.runner(1, cloud_mp=mp)           # divisible, so runner exists...
+    with pytest.raises(AssertionError, match="devices"):
+        bank._fn("cloud", 1, mp)          # ...but the mesh cannot build
+
+
+# ---------------------------------------------------------------------------
+# timing-only simulator threading
+# ---------------------------------------------------------------------------
+
+
+def test_edge_mode_ignores_cloud_degree():
+    """Mobile-only serving must not compile (or demand the devices of) the
+    cloud's mesh: with cloud_mp=4 on this 1-device host, the edge-resident
+    local engine runs at the edge degree and the sim completes."""
+    cfg = dataclasses.replace(_cfg(), num_heads=8, num_kv_heads=4)
+    tel = run_sim(SimConfig(cfg=cfg, mode="edge", cloud_mp=4, num_devices=2,
+                            num_requests=4, prompt_len=12, max_new_tokens=2,
+                            d_r=16, initial_split=1, seed=0))
+    assert all(t.new_tokens == 2 for t in tel.traces)
+
+
+def test_sim_timing_only_model_parallel_cloud_is_faster():
+    cfg = dataclasses.replace(_cfg(), num_layers=4)
+    base = dict(cfg=cfg, mode="split", num_devices=2, num_requests=8,
+                arrival_rate=50.0, prompt_len=32, max_new_tokens=2,
+                d_r=16, initial_split=1, numerics=False, seed=0)
+    t1 = run_sim(SimConfig(**base))
+    t4 = run_sim(SimConfig(**base, cloud_mp=4))
+    lat1 = np.mean([t.latency_s for t in t1.traces])
+    lat4 = np.mean([t.latency_s for t in t4.traces])
+    assert lat4 < lat1, (lat4, lat1)
