@@ -300,14 +300,16 @@ def bench_runtime():
     """Split-serving runtime: cloud-only (raw upload) vs the butterfly split
     under identical Poisson traffic, a streamed vs cache-handoff decode
     transport comparison on a long-prompt/multi-token workload (both runs on
-    the SAME arrival trace via the shared builder), plus the adaptive
-    controller's split trajectory under a cloud-load ramp.  Emits one JSON
-    document (runtime/json row) with the full comparison."""
+    the SAME arrival trace via the shared builder), the adaptive
+    controller's split trajectory under a cloud-load ramp, and a multi-cell
+    topology scenario (heterogeneous fleets on per-cell radios vs the same
+    fleet through one shared 3g wire, per-cell controllers diverging).
+    Emits one JSON document (runtime/json row) with the full comparison."""
     import dataclasses
 
     from repro.configs import get_config
     from repro.core.profiler import JETSON_TX2
-    from repro.runtime.simulator import (SimConfig, Simulation,
+    from repro.runtime.simulator import (CellSpec, SimConfig, Simulation,
                                          poisson_arrivals, ramp_load)
 
     cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), num_layers=4)
@@ -389,9 +391,70 @@ def bench_runtime():
         "split_at_high_load": traj[-1]["split"],
         "moved_deeper_past_0.9": traj[-1]["split"] > traj[0]["split"],
     }
-    us = (time.perf_counter() - t0) * 1e6
-    print(f"runtime/adaptive,{us/13:.0f},split "
+    print(f"runtime/adaptive,0,split "
           f"{traj[0]['split']}->{traj[-1]['split']} as load crosses 0.9")
+    # multi-cell topology: jetson-class gateways on a 3g backhaul + phones
+    # on home wifi, one cloud at 95% background load.  Device class is the
+    # split-depth lever (the fast edge absorbs the congested cloud's work),
+    # the radio is the transport/contention lever — so the per-cell
+    # controllers must diverge.  The baseline forces the SAME fleet through
+    # ONE shared 3g wire (a single wire group), which couples the cells'
+    # contention and erases the wifi cell's advantage.
+    cells = (CellSpec(name="3g-jet", network="3g", num_devices=4,
+                      device="jetson"),
+             CellSpec(name="wifi-ph", network="wifi", num_devices=4,
+                      device="phone"))
+    shared = tuple(dataclasses.replace(c, network="3g", wire="up0")
+                   for c in cells)
+    topo_base = dataclasses.replace(
+        base, num_requests=48, prompt_len=64, max_new_tokens=8,
+        adapt=True, transport="auto", control_interval_s=0.02,
+        background_load=lambda t: 0.95)
+    topo = {"spec": "3g:4xjetson + wifi:4xphone @ cloud load 0.95",
+            "cells": {}}
+    sim = Simulation(dataclasses.replace(topo_base, topology=cells))
+    tel = sim.run()
+    per_cell = tel.cell_summary()
+    for cell in sim.cells:
+        last = [d for d in tel.decisions if d.cell == cell.name][-1]
+        row = per_cell[cell.name]
+        topo["cells"][cell.name] = {
+            "latency_p50_ms": round(row["latency_p50_ms"], 3),
+            "mean_uplink_wait_ms": round(row["mean_uplink_wait_ms"], 3),
+            "mean_mobile_energy_mj": round(row["mean_mobile_energy_mj"], 3),
+            "final_split": last.new_split,
+            "final_transport": last.transport,
+        }
+    fair = tel.fairness()
+    topo["fairness"] = {k: round(v, 4) for k, v in fair.items()}
+    finals = [(c["final_split"], c["final_transport"])
+              for c in topo["cells"].values()]
+    topo["controllers_diverged"] = finals[0] != finals[1]
+    assert topo["controllers_diverged"], \
+        f"per-cell controllers failed to diverge: {topo['cells']}"
+    assert topo["cells"]["3g-jet"]["final_split"] > \
+        topo["cells"]["wifi-ph"]["final_split"], \
+        "3g cell did not settle on the deeper split"
+    shared_tel = Simulation(dataclasses.replace(
+        topo_base, topology=shared)).run()
+    topo["shared_3g_wire"] = {
+        "latency_p50_ms": round(shared_tel.summary()["latency_p50_ms"], 3),
+        "fairness_jain": round(shared_tel.fairness()["jain_index"], 4),
+    }
+    topo["isolated_vs_shared_p50_speedup"] = round(
+        shared_tel.summary()["latency_p50_ms"] /
+        tel.summary()["latency_p50_ms"], 2)
+    result["topology"] = topo
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"runtime/topology,{us/15:.0f},"
+          f"3g-jet=(s{topo['cells']['3g-jet']['final_split']},"
+          f"{topo['cells']['3g-jet']['final_transport']}) "
+          f"wifi-ph=(s{topo['cells']['wifi-ph']['final_split']},"
+          f"{topo['cells']['wifi-ph']['final_transport']}) "
+          f"jain={topo['fairness']['jain_index']} "
+          f"shared_3g_p50={topo['shared_3g_wire']['latency_p50_ms']:.2f}ms "
+          f"({topo['isolated_vs_shared_p50_speedup']}x slower than "
+          f"per-cell radios)")
     print(f"runtime/json,0,{json.dumps(result, sort_keys=True)}")
     _append_runtime_artifact(result)
 

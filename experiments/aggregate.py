@@ -130,6 +130,28 @@ def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
         print(f"\nadaptive: split {ad.get('split_at_low_load')} -> "
               f"{ad.get('split_at_high_load')} under the load ramp "
               f"(moved deeper past 0.9: {ad.get('moved_deeper_past_0.9')})")
+    topo = last.get("topology")
+    if topo:
+        print(f"\n#### Multi-cell topology ({topo['spec']})\n")
+        print("| cell | p50 | uplink wait | energy/req | final split "
+              "| transport |")
+        print("|---|---|---|---|---|---|")
+        for name, row in sorted(topo["cells"].items()):
+            print(f"| {name} | {row['latency_p50_ms']:.2f}ms "
+                  f"| {row['mean_uplink_wait_ms']:.2f}ms "
+                  f"| {row['mean_mobile_energy_mj']:.1f}mJ "
+                  f"| {row['final_split']} | {row['final_transport']} |")
+        fair = topo["fairness"]
+        print(f"\nper-cell controllers diverged: "
+              f"{topo['controllers_diverged']}; fairness max/min "
+              f"{fair['max_min_latency_ratio']:.2f}x, p95 spread "
+              f"{fair['p95_spread_ms']:.2f}ms, Jain {fair['jain_index']:.3f}")
+        shared = topo["shared_3g_wire"]
+        print(f"same fleet through ONE shared 3g wire: p50 "
+              f"{shared['latency_p50_ms']:.2f}ms (Jain "
+              f"{shared['fairness_jain']:.3f}) — "
+              f"{topo['isolated_vs_shared_p50_speedup']}x slower than "
+              f"per-cell radios")
     if len(runs) > 1:
         print("\n#### Perf trajectory (split int8 p50 on 3g, per run)\n")
         for r in runs:

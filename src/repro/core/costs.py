@@ -215,6 +215,16 @@ def cloud_decode_step_cost(cfg: ModelConfig, split: int, d_r: int,
     return flops, nbytes
 
 
+def kv_cache_bytes(cfg: ModelConfig, seq: int, layers: int) -> float:
+    """KV-cache bytes for ``layers`` attention layers over a ``seq``-token
+    prompt: K and V, ``num_kv_heads`` heads of ``head_dim`` each.  This is
+    what the cache-handoff decode transport ships up the wire per edge
+    layer (and what the selection phase charges it per split)."""
+    per_layer = 2 * seq * cfg.num_kv_heads * cfg.resolved_head_dim * \
+        _act_bytes(cfg)
+    return float(per_layer * layers)
+
+
 # ---------------------------------------------------------------------------
 # resnet accounting (paper's arch)
 # ---------------------------------------------------------------------------

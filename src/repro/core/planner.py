@@ -179,6 +179,52 @@ def plan_transformer_split(cfg, seq: int, batch: int, *,
 # ---------------------------------------------------------------------------
 
 
+# Pluggable selection objectives: each maps the scored (split, transport)
+# rows to the winning row.  Registered by name so runtime controllers (and
+# the CLI's --objective flag) can pick them without the planner knowing who
+# is asking; register_objective() admits project-specific policies.
+SELECTION_OBJECTIVES: Dict[str, Callable] = {}
+
+
+def register_objective(name: str, fn: Callable) -> None:
+    """``fn(rows, *, slo_s=None) -> row`` over select_split_online's scored
+    rows (each has latency_s / energy_mj / split / transport)."""
+    SELECTION_OBJECTIVES[name] = fn
+
+
+def _objective_latency(rows, *, slo_s=None):
+    return min(rows, key=lambda r: r["latency_s"])
+
+
+def _objective_energy(rows, *, slo_s=None):
+    return min(rows, key=lambda r: r["energy_mj"])
+
+
+def _objective_energy_under_slo(rows, *, slo_s=None):
+    """Min mobile energy subject to predicted latency <= SLO.  When no
+    candidate meets the SLO the best-effort fallback is the latency winner
+    (the least-infeasible pick) rather than an arbitrary energy row."""
+    assert slo_s is not None and slo_s > 0, \
+        "objective 'energy_under_slo' needs an SLO (--slo-ms)"
+    feasible = [r for r in rows if r["latency_s"] <= slo_s]
+    if not feasible:
+        return _objective_latency(rows)
+    return min(feasible, key=lambda r: r["energy_mj"])
+
+
+register_objective("latency", _objective_latency)
+register_objective("energy", _objective_energy)
+register_objective("energy_under_slo", _objective_energy_under_slo)
+
+
+def resolve_objective(name: str) -> Callable:
+    try:
+        return SELECTION_OBJECTIVES[name]
+    except KeyError:
+        raise KeyError(f"unknown selection objective {name!r}; known: "
+                       f"{sorted(SELECTION_OBJECTIVES)}") from None
+
+
 def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
                     batch: int = 1) -> float:
     """Uplink payload per request for each wire ablation mode.
@@ -211,7 +257,8 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                         new_tokens: int = 1,
                         downlink_bytes_per_s: Optional[float] = None,
                         downlink_energy_mj_per_byte: float = 0.0,
-                        edge_mp: int = 1, cloud_mp: int = 1):
+                        edge_mp: int = 1, cloud_mp: int = 1,
+                        slo_s: Optional[float] = None):
     """One online iteration of Algorithm 1's selection phase.
 
     Unlike :func:`plan_transformer_split` this takes the *measured* state the
@@ -229,11 +276,15 @@ def select_split_online(cfg, seq: int, d_r: int, *,
       term against the observed link rates, with uplink bytes flat in the
       prompt length.
 
+    ``objective`` names a registered selection objective
+    (:data:`SELECTION_OBJECTIVES`): ``latency``, ``energy``, or
+    ``energy_under_slo`` (min energy s.t. predicted latency <= ``slo_s``).
+
     Returns ``(best_row, rows)``; rows carry a ``transport`` field on top of
     the offline planner's schema."""
     from repro.core import costs
 
-    assert objective in ("latency", "energy")
+    pick = resolve_objective(objective)
     n = cfg.num_layers
     T = max(int(new_tokens), 1)
     base_wire = wire_mode_bytes(cfg, seq, d_r, wire_mode)
@@ -295,6 +346,5 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                              wire * link_energy_mj_per_byte +
                              down_bytes * downlink_energy_mj_per_byte,
             })
-    key = "latency_s" if objective == "latency" else "energy_mj"
-    best = min(rows, key=lambda r: r[key])
+    best = pick(rows, slo_s=slo_s)
     return best, rows

@@ -39,6 +39,27 @@ JETSON_TX2 = HardwareProfile("jetson_tx2", 1.33e12, 59.7e9, compute_power_w=7.5)
 GTX_1080TI = HardwareProfile("gtx_1080ti", 1.33e12 * 30, 484e9, compute_power_w=250.0)
 # TPU v5e target (assignment constants)
 TPU_V5E = HardwareProfile("tpu_v5e", 197e12, 819e9, compute_power_w=170.0)
+# phone-class NPU (mid-range smartphone DSP/NPU slice: ~1/4 of a TX2 at a
+# fraction of the power budget) — the weak end of a heterogeneous fleet
+PHONE_NPU = HardwareProfile("phone_npu", 0.35e12, 25.6e9, compute_power_w=2.5)
+
+# edge-device classes a multi-cell topology's fleets draw from (CellSpec
+# names a class per cell; runtime_sim's --topology grammar uses the keys)
+DEVICE_CLASSES: Dict[str, HardwareProfile] = {
+    "phone": PHONE_NPU,
+    "jetson": JETSON_TX2,
+}
+
+
+def get_device_class(name) -> HardwareProfile:
+    """Resolve a device-class name (or pass a HardwareProfile through)."""
+    if isinstance(name, HardwareProfile):
+        return name
+    try:
+        return DEVICE_CLASSES[name]
+    except KeyError:
+        raise KeyError(f"unknown device class {name!r}; known: "
+                       f"{sorted(DEVICE_CLASSES)}") from None
 
 
 @dataclass(frozen=True)

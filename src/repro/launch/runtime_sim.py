@@ -5,6 +5,12 @@ butterfly split (edge half -> contended wireless uplink -> cloud
 continuous-batching server) on a deterministic virtual clock, and prints the
 per-request latency breakdown plus p50/p95/p99 aggregates.
 
+Multi-cell topologies put heterogeneous fleets behind per-cell radios
+(``--topology 3g:4xphone,wifi:2xjetson``): each cell gets its own Wire and
+its own adaptive controller, all contending for one cloud.  Any run's
+arrival stream can be recorded to JSONL (``--record-trace``) and replayed
+byte-for-byte (``--replay-trace``).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.runtime_sim --network 3g --devices 4 --requests 16
   PYTHONPATH=src python -m repro.launch.runtime_sim --mode cloud --network 3g
@@ -13,6 +19,14 @@ Examples:
       --seq 128 --max-new-tokens 16 --no-numerics
   PYTHONPATH=src python -m repro.launch.runtime_sim --adapt --load-ramp 0:0,0.3:0.97 \\
       --requests 64 --rate 40 --max-new-tokens 1 --no-numerics
+  PYTHONPATH=src python -m repro.launch.runtime_sim --topology 3g:4xjetson,wifi:4xphone \\
+      --adapt --transport auto --load-ramp 0:0.95 --no-numerics \\
+      --record-trace trace.jsonl
+  PYTHONPATH=src python -m repro.launch.runtime_sim --topology 3g:4xjetson,wifi:4xphone \\
+      --adapt --transport auto --load-ramp 0:0.95 --no-numerics \\
+      --replay-trace trace.jsonl
+  PYTHONPATH=src python -m repro.launch.runtime_sim --adapt \\
+      --objective energy_under_slo --slo-ms 50 --no-numerics
 """
 from __future__ import annotations
 
@@ -65,15 +79,23 @@ def main():
                          "cache_handoff ships the edge stage-0 KV cache up "
                          "front; streamed keeps it on the edge and sends one "
                          "int8 (1, d_r) row per generated token (DESIGN.md "
-                         "section 8.6); auto lets the adaptive controller "
-                         "pick per request (requires --adapt)")
+                         "section 8.6); auto lets each cell's adaptive "
+                         "controller pick per request (requires --adapt)")
     ap.add_argument("--network", default="3g",
                     choices=("3g", "4g", "wifi", "inter_pod"))
     ap.add_argument("--duplex", choices=("split", "shared"), default="split",
                     help="uplink/downlink FIFO contention: independent per "
                          "direction (split) or one serial frontier (shared)")
+    ap.add_argument("--topology", default=None,
+                    help="multi-cell topology 'net[/duplex]:<N>x<class>"
+                         "[@rate],...' (e.g. '3g:4xphone,wifi:2xjetson'; "
+                         "classes: core/profiler.DEVICE_CLASSES); each cell "
+                         "gets its own Wire + adaptive controller and "
+                         "overrides --network/--duplex/--devices "
+                         "(DESIGN.md section 12)")
     ap.add_argument("--devices", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="total requests across all cells")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="Poisson arrival rate per device (req/s)")
     ap.add_argument("--seq", type=int, default=32)
@@ -82,7 +104,14 @@ def main():
     ap.add_argument("--split", type=int, default=1,
                     help="initial partition point (layers on the edge)")
     ap.add_argument("--adapt", action="store_true",
-                    help="enable the adaptive split controller (Sec. III-C)")
+                    help="enable the adaptive split controller (Sec. III-C); "
+                         "topologies run one controller per cell")
+    ap.add_argument("--objective", default="latency",
+                    help="controller selection objective "
+                         "(core/planner.SELECTION_OBJECTIVES): latency | "
+                         "energy | energy_under_slo (needs --slo-ms)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency SLO for --objective energy_under_slo")
     ap.add_argument("--control-interval", type=float, default=0.05)
     ap.add_argument("--load-ramp", default=None,
                     help='background cloud load "t0:l0,t1:l1,..."')
@@ -102,12 +131,20 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-numerics", action="store_true",
                     help="timing-only (skip the real jax computation)")
+    ap.add_argument("--record-trace", default=None, metavar="JSONL",
+                    help="record this run's arrival stream (cell, device, t, "
+                         "prompt) for later --replay-trace")
+    ap.add_argument("--replay-trace", default=None, metavar="JSONL",
+                    help="replay a recorded arrival stream instead of "
+                         "building Poisson arrivals (byte-for-byte "
+                         "reproducible; overrides --requests/--rate)")
     ap.add_argument("--json", default=None, help="write full trace JSON here")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.core.profiler import GTX_1080TI, JETSON_TX2
-    from repro.runtime.simulator import SimConfig, Simulation
+    from repro.runtime.simulator import (SimConfig, Simulation,
+                                         parse_topology, trace_arrivals)
 
     cfg = get_config(args.arch).reduced()
     if args.layers and args.layers != cfg.num_layers:
@@ -119,10 +156,14 @@ def main():
     edge = JETSON_TX2
     cloud = edge.scaled(args.cloud_x, "cloud_slice") if args.cloud_x \
         else GTX_1080TI
+    topology = parse_topology(args.topology) if args.topology else None
+    arrivals = None
+    if args.replay_trace:
+        arrivals = trace_arrivals(args.replay_trace)
     sim_cfg = SimConfig(
         cfg=cfg, mode=args.mode, wire_mode=args.wire_mode,
         transport=args.transport, network=args.network, duplex=args.duplex,
-        num_devices=args.devices,
+        topology=topology, num_devices=args.devices,
         num_requests=args.requests, arrival_rate=args.rate,
         prompt_len=args.seq, max_new_tokens=args.max_new_tokens,
         d_r=args.d_r, initial_split=args.split,
@@ -130,19 +171,26 @@ def main():
         edge_mp=args.edge_mp, cloud_mp=args.cloud_mp,
         background_load=parse_ramp(args.load_ramp) if args.load_ramp else None,
         adapt=args.adapt, control_interval_s=args.control_interval,
+        objective=args.objective, slo_ms=args.slo_ms,
         max_concurrent=args.max_concurrent, seed=args.seed,
-        numerics=not args.no_numerics)
+        numerics=not args.no_numerics, arrivals=arrivals)
 
     sim = Simulation(sim_cfg)
+    if args.record_trace:
+        sim.record_trace(args.record_trace)
+        print(f"# recorded {len(sim.arrivals)} arrivals -> "
+              f"{args.record_trace}")
     tel = sim.run()
 
     mp_note = ""
     if args.edge_mp > 1 or args.cloud_mp > 1:
         mp_note = f", model-parallel edge x{args.edge_mp} / " \
                   f"cloud x{args.cloud_mp}"
+    fleet_note = args.topology if args.topology else \
+        f"{args.devices} devices on {args.network}"
     print(f"# {args.mode} serving, wire={args.wire_mode}, "
-          f"transport={args.transport}, network={args.network}, "
-          f"{args.devices} devices, {args.requests} requests, "
+          f"transport={args.transport}, {fleet_note}, "
+          f"{len(sim.arrivals)} requests, "
           f"arch={cfg.name} ({cfg.num_layers} layers, d_r={args.d_r})"
           f"{mp_note}")
     print(tel.table())
@@ -153,22 +201,36 @@ def main():
     print(f"ttft     p50 {s['ttft_p50_ms']:9.2f} ms   "
           f"mean wire {s['mean_wire_kb']:8.2f} kB   "
           f"mean mobile energy {s['mean_mobile_energy_mj']:8.1f} mJ")
-    print(f"uplink   busy {sim.uplink.stats.busy_s*1e3:.1f} ms, "
-          f"contention wait {sim.uplink.stats.wait_s*1e3:.1f} ms over "
-          f"{sim.uplink.stats.n_transfers} transfers")
-    print(f"downlink busy {sim.uplink.down_stats.busy_s*1e3:.1f} ms, "
-          f"contention wait {sim.uplink.down_stats.wait_s*1e3:.1f} ms over "
-          f"{sim.uplink.down_stats.n_transfers} transfers "
-          f"({sim.uplink.down_stats.bytes_sent:.0f} B of sampled ids)")
+    for cell in sim.cells:
+        w = cell.wire
+        print(f"[{cell.name}] uplink busy {w.stats.busy_s*1e3:.1f} ms, "
+              f"wait {w.stats.wait_s*1e3:.1f} ms over "
+              f"{w.stats.n_transfers} transfers; "
+              f"downlink busy {w.down_stats.busy_s*1e3:.1f} ms, "
+              f"wait {w.down_stats.wait_s*1e3:.1f} ms "
+              f"({w.down_stats.bytes_sent:.0f} B of sampled ids)")
+    if len(sim.cells) > 1:
+        fair = tel.fairness()
+        print(f"fairness: max/min mean latency "
+              f"{fair['max_min_latency_ratio']:.2f}x, p95 spread "
+              f"{fair['p95_spread_ms']:.2f} ms, Jain "
+              f"{fair['jain_index']:.3f}")
+        for name, row in tel.cell_summary().items():
+            print(f"  [{name}] n={row['n_requests']:.0f} "
+                  f"p50 {row['latency_p50_ms']:.2f} ms  "
+                  f"p95 {row['latency_p95_ms']:.2f} ms  "
+                  f"uplink wait {row['mean_uplink_wait_ms']:.2f} ms  "
+                  f"energy {row['mean_mobile_energy_mj']:.1f} mJ")
     if s["mean_stream_rtt_ms"] > 0:
         print(f"streamed decode: mean per-token RTT "
               f"{s['mean_stream_rtt_ms']:.2f} ms "
               f"(row up + cloud turn + id down)")
     if tel.decisions:
-        print("\ncontroller decisions (t, cloud_load, split, transport):")
+        print("\ncontroller decisions (t, cell, cloud_load, split, "
+              "transport):")
         for d in tel.decisions:
             mark = " <-- moved" if d.new_split != d.old_split else ""
-            print(f"  {d.t:7.3f}s  load={d.cloud_load:5.1%}  "
+            print(f"  {d.t:7.3f}s  [{d.cell}]  load={d.cloud_load:5.1%}  "
                   f"split={d.new_split}  {d.transport}{mark}")
     if args.json:
         with open(args.json, "w") as f:

@@ -6,24 +6,30 @@ This package provides the missing request-stream layer on top of the repo's
 static pieces:
 
   clock.py       deterministic discrete-event loop (reproducible traces)
-  wire.py        contended uplink + downlink over core/wireless link models
-  telemetry.py   per-request latency/energy breakdown + p50/p95/p99
+  wire.py        contended uplink + downlink, windowed goodput feedback
+  telemetry.py   per-request breakdown, p50/p95/p99, per-cell fairness
   split_exec.py  real jax numerics for the edge/cloud halves + cost model
   transports.py  pluggable decode transports (cache handoff vs streamed rows)
-  actors.py      edge-device fleet and the cloud continuous-batching server
-  controller.py  adaptive split + transport control (online selection phase)
-  simulator.py   ties the above into a runnable simulation
+  actors.py      edge-device fleets and the cloud continuous-batching server
+  controller.py  per-cell adaptive split + transport control (pluggable
+                 objectives: latency / energy / energy_under_slo)
+  simulator.py   multi-cell topologies (CellSpec grammar), arrival-trace
+                 record/replay, and the runnable simulation
 
 Entry points: ``repro.launch.runtime_sim`` (CLI) and
 ``benchmarks.run runtime`` (JSON comparison vs cloud-only offload).
 """
 from repro.runtime.clock import EventLoop
 from repro.runtime.controller import AdaptiveSplitController
-from repro.runtime.simulator import SimConfig, Simulation, poisson_arrivals
+from repro.runtime.simulator import (Arrival, CellSpec, SimConfig, Simulation,
+                                     Topology, parse_topology,
+                                     poisson_arrivals, record_arrivals,
+                                     trace_arrivals)
 from repro.runtime.telemetry import RequestTrace, Telemetry
 from repro.runtime.transports import DecodeTransport, get_transport
-from repro.runtime.wire import Uplink, Wire
+from repro.runtime.wire import Wire
 
-__all__ = ["EventLoop", "AdaptiveSplitController", "SimConfig", "Simulation",
-           "RequestTrace", "Telemetry", "Uplink", "Wire", "DecodeTransport",
-           "get_transport", "poisson_arrivals"]
+__all__ = ["EventLoop", "AdaptiveSplitController", "Arrival", "CellSpec",
+           "SimConfig", "Simulation", "Topology", "RequestTrace", "Telemetry",
+           "Wire", "DecodeTransport", "get_transport", "parse_topology",
+           "poisson_arrivals", "record_arrivals", "trace_arrivals"]

@@ -70,21 +70,30 @@ class EdgeDevice:
     def __init__(self, dev_id: int, *, loop: EventLoop, cost: CostModel,
                  uplink: Wire, server: "CloudServer",
                  bank: Optional[SplitModelBank], mode: str, wire_mode: str,
-                 d_r: int, telemetry: Telemetry, numerics_split: int = 1):
+                 d_r: int, telemetry: Telemetry, numerics_split: int = 1,
+                 cell: str = "cell0", cell_index: int = 0):
         self.dev_id = dev_id
         self.numerics_split = numerics_split
         self.loop = loop
-        self.cost = cost
-        self.uplink = uplink
+        self.cost = cost                    # this cell's cost model (edge hw)
+        self.uplink = uplink                # this cell's Wire
         self.server = server
         self.bank = bank
         self.mode = mode
         self.wire_mode = wire_mode
         self.d_r = d_r
         self.telemetry = telemetry
+        self.cell = cell                    # topology cell this device lives in
+        self.cell_index = cell_index
+        self.edge_mp = cost.edge_mp
         self.free_at = 0.0
         self._local_engine = None
         self._numerics_pending: List[SimRequest] = []
+
+    def runner(self, split: int):
+        """This cell's view of the bank: the edge half runs at the cell's
+        model-axis degree (the cloud degree is fleet-global)."""
+        return self.bank.runner(split, edge_mp=self.edge_mp)
 
     def on_arrival(self, req: SimRequest) -> None:
         t = req.trace
@@ -140,7 +149,7 @@ class EdgeDevice:
                      r.tokens.shape == req.tokens.shape]
         else:
             group = [req]
-        runner = self.bank.runner(req.trace.split)
+        runner = self.runner(req.trace.split)
         toks = np.stack([r.tokens for r in group])
         payload, scales, cache0 = runner.edge_half(runner.params, toks)
         for i, r in enumerate(group):
@@ -160,7 +169,7 @@ class EdgeDevice:
             # numerics when both halves share a device); one engine per
             # device, reused across its serial requests
             if self._local_engine is None:
-                runner = self.bank.runner(self.numerics_split)
+                runner = self.runner(self.numerics_split)
                 # this engine lives on the DEVICE: run it at the edge degree
                 # so mobile-only mode never builds the cloud's mesh
                 self._local_engine = runner.make_engine(
@@ -199,7 +208,7 @@ class CloudServer:
         self.max_len = max_len
         self.engine_seed = engine_seed
         self.on_done = on_done
-        self.wire = wire                          # downlink back to the fleet
+        self.wire = wire                          # downlink fallback (1 cell)
         self.devices: List[object] = []           # filled by the simulator
         self.pending: deque[SimRequest] = deque()
         self.stream_ready: deque[SimRequest] = deque()  # rows awaiting a turn
@@ -230,6 +239,13 @@ class CloudServer:
         bg = min(max(self.background_load(now), 0.0), 0.99)
         occ = self.num_active / self.max_concurrent
         return min(1.0 - (1.0 - bg) * (1.0 - occ), 0.99)
+
+    def wire_for(self, req: SimRequest) -> Optional[Wire]:
+        """The Wire serving ``req``'s cell (responses go back down the same
+        link the request came up — per-cell downlink contention)."""
+        if self.devices:
+            return self.devices[req.trace.device].uplink
+        return self.wire
 
     # -- request flow -------------------------------------------------------
     def on_payload(self, req: SimRequest) -> None:
@@ -402,13 +418,14 @@ class CloudServer:
         if req.slot >= 0:
             self.slots[req.slot] = None
             req.slot = -1
-        if self.wire is None:               # no modeled downlink: instant
+        wire = self.wire_for(req)
+        if wire is None:                    # no modeled downlink: instant
             self._deliver(req)
             return
         nbytes = TOKEN_BYTES * t.new_tokens
         t.downlink_bytes += nbytes
-        start, done = self.wire.transfer_down(nbytes, self.loop.now)
-        t.mobile_energy_mj += self.wire.downlink_energy_mj(nbytes)
+        start, done = wire.transfer_down(nbytes, self.loop.now)
+        t.mobile_energy_mj += wire.downlink_energy_mj(nbytes)
         self.loop.schedule_at(done, lambda: self._deliver(req))
 
     def _deliver(self, req: SimRequest) -> None:

@@ -3,16 +3,23 @@ closed-loop.
 
 Periodically (the mobile "pings the server"), the controller samples the
 cloud's congestion level and the uplink's *observed* goodput (nominal
-bandwidth derated by contention) and re-runs Algorithm 1's selection phase
-(core/planner.select_split_online) over the hosted partition points.  New
-requests are then routed to the winning split: congestion pushes the split
-deeper — more layers stay on the edge — while still shipping less than the
-raw input.
+bandwidth derated by contention, over the Wire's trailing window) and
+re-runs Algorithm 1's selection phase (core/planner.select_split_online)
+over the hosted partition points.  New requests are then routed to the
+winning split: congestion pushes the split deeper — more layers stay on the
+edge — while still shipping less than the raw input.
 
 When ``transport_mode="auto"`` the selection phase also scores both decode
 transports per split — cache handoff's prompt-proportional KV bytes vs the
 streamed transport's per-token RTT x ``new_tokens`` — and the controller
 routes new arrivals to the winning (split, transport) pair.
+
+In a multi-cell topology each cell runs its OWN controller instance against
+its own Wire and device class (``cell`` labels its decisions); all
+instances observe the same shared CloudServer load, so cross-cell
+congestion is the coupling signal.  ``objective`` names a registered
+selection objective (planner.SELECTION_OBJECTIVES) — ``latency``,
+``energy``, or ``energy_under_slo`` with ``slo_s``.
 """
 from __future__ import annotations
 
@@ -37,14 +44,18 @@ class AdaptiveSplitController:
                  interval_s: float = 0.05,
                  handoff_bytes_per_layer: float = 0.0,
                  objective: str = "latency",
+                 slo_s: Optional[float] = None,
                  transport_mode: str = "cache_handoff",
                  new_tokens: int = 1,
                  set_transport: Optional[Callable[[str], None]] = None,
                  get_transport: Optional[Callable[[], str]] = None,
-                 edge_mp: int = 1, cloud_mp: int = 1):
+                 edge_mp: int = 1, cloud_mp: int = 1,
+                 cell: str = "cell0"):
         assert transport_mode in ("cache_handoff", "streamed", "auto"), \
             transport_mode
         self.handoff_bytes_per_layer = handoff_bytes_per_layer
+        self.cell = cell
+        self.slo_s = slo_s
         # score with the same model-axis degrees the CostModel charges, so
         # the controller's picks stay consistent with simulated durations
         self.edge_mp = edge_mp
@@ -90,7 +101,7 @@ class AdaptiveSplitController:
             wire_mode=self.wire_mode,
             link_energy_mj_per_byte=self.uplink.transfer_energy_mj(1.0),
             handoff_bytes_per_layer=self.handoff_bytes_per_layer,
-            objective=self.objective,
+            objective=self.objective, slo_s=self.slo_s,
             transports=transports, new_tokens=self.new_tokens,
             downlink_bytes_per_s=self.uplink.observed_down_bytes_per_s(now),
             downlink_energy_mj_per_byte=self.uplink.downlink_energy_mj(1.0),
@@ -99,7 +110,7 @@ class AdaptiveSplitController:
         self.telemetry.record_decision(ControlDecision(
             t=now, cloud_load=load, link_bytes_per_s=link_bps,
             old_split=old, new_split=best["split"],
-            transport=best["transport"]))
+            transport=best["transport"], cell=self.cell))
         if best["split"] != old:
             self.set_split(best["split"])
         if self.set_transport is not None and \

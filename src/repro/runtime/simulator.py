@@ -1,11 +1,22 @@
-"""The split-serving simulation: fleet + wire + server + controller.
+"""The split-serving simulation: a topology of cells + one shared cloud.
 
-A fleet of edge devices emits Poisson request streams; each request runs the
-edge half of the current partition point, contends for the shared uplink,
-and is served by the cloud's continuous-batching engine.  All timing is
-virtual (deterministic for a fixed seed); numerics are real jax when
-``numerics=True`` and skipped entirely in timing-only mode (used by the
-fast benchmark sweeps and scheduler tests).
+A :class:`Topology` is a tuple of :class:`CellSpec`s.  Each cell owns its
+own radio (:class:`~repro.runtime.wire.Wire` — link model + duplex), its
+own fleet of one edge-device class (per-class
+:class:`~repro.core.profiler.HardwareProfile`, per-cell ``edge_mp`` and
+arrival rate), and — when adaptation is on — its own
+:class:`~repro.runtime.controller.AdaptiveSplitController` routing that
+cell's new arrivals to a per-cell ``(split, transport)`` pair.  Every cell
+contends for ONE :class:`~repro.runtime.actors.CloudServer`: cross-cell
+congestion (the fleet's combined slot occupancy plus background tenants) is
+the shared signal the per-cell controllers react to, while uplink goodput
+feedback stays per cell.  The classic single-uplink configuration
+(``SimConfig(network=..., num_devices=...)``) is exactly a 1-cell topology
+— the same code path, not a parallel one.
+
+All timing is virtual (deterministic for a fixed seed); numerics are real
+jax when ``numerics=True`` and skipped entirely in timing-only mode (used
+by the fast benchmark sweeps and scheduler tests).
 
 Serving modes:
   "split"  the paper: edge layers + butterfly reduce/quantize, compressed wire
@@ -16,17 +27,24 @@ Decode transports (split mode, multi-token requests — runtime/transports.py):
   "cache_handoff"  ship the edge stage-0 KV cache up; decode cloud-side
   "streamed"       edge keeps its cache; one (1, d_r) row up + one id down
                    per generated token
-  "auto"           the adaptive controller picks per request, alongside the
-                   split (requires adapt=True)
+  "auto"           each cell's adaptive controller picks per request,
+                   alongside the split (requires adapt=True)
+
+Trace replay: any run's arrival stream (cell, device, t, prompt tokens) can
+be recorded to JSONL (:meth:`Simulation.record_trace`) and rebuilt with
+:func:`trace_arrivals`, making topology runs byte-for-byte reproducible and
+letting real arrival logs drive the simulator.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field, replace
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.profiler import GTX_1080TI, JETSON_TX2, HardwareProfile
+from repro.core.profiler import (GTX_1080TI, JETSON_TX2, HardwareProfile,
+                                 get_device_class)
 from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
 from repro.runtime.clock import EventLoop
 from repro.runtime.split_exec import CostModel, SplitModelBank
@@ -46,29 +64,130 @@ def ramp_load(t0: float, t1: float, l0: float = 0.0,
     return f
 
 
+# ---------------------------------------------------------------------------
+# topology: cells of heterogeneous fleets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One cell of a topology: a radio + a fleet of one device class.
+
+    ``device`` is a device-class name from
+    :data:`repro.core.profiler.DEVICE_CLASSES` ("phone", "jetson", ...) or
+    a :class:`HardwareProfile` directly.  ``None`` fields inherit the
+    :class:`SimConfig` fleet-wide value.  ``wire`` names a wire group:
+    cells sharing the same group name share ONE physical Wire (e.g. two
+    fleets forced through a single congested uplink); by default each cell
+    gets its own."""
+    name: str
+    network: str = "3g"
+    num_devices: int = 4
+    device: Union[str, HardwareProfile] = "jetson"
+    duplex: Optional[str] = None             # None -> SimConfig.duplex
+    edge_mp: int = 1
+    arrival_rate: Optional[float] = None     # None -> SimConfig.arrival_rate
+    num_requests: Optional[int] = None       # None -> even share of the total
+    initial_split: Optional[int] = None      # None -> SimConfig.initial_split
+    transport: Optional[str] = None          # None -> SimConfig.transport
+    wire: Optional[str] = None               # wire-group key (shared uplink)
+
+    def hardware(self) -> HardwareProfile:
+        return get_device_class(self.device)
+
+
+Topology = Tuple[CellSpec, ...]
+
+
+def parse_topology(spec: str) -> Topology:
+    """Inline topology grammar: comma-separated cells, each
+    ``network[/duplex]:<N>x<class>[@rate]`` — e.g.
+    ``"3g:4xphone,wifi:2xjetson"`` or ``"4g/shared:8xphone@30"``.  Cell
+    names are ``<network><index>``."""
+    cells: List[CellSpec] = []
+    for i, part in enumerate(s.strip() for s in spec.split(",")):
+        try:
+            net, fleet = part.split(":")
+            duplex = None
+            if "/" in net:
+                net, duplex = net.split("/")
+            rate = None
+            if "@" in fleet:
+                fleet, rate_s = fleet.split("@")
+                rate = float(rate_s)
+            n, klass = fleet.split("x", 1)
+            cells.append(CellSpec(
+                name=f"{net}{i}", network=net, num_devices=int(n),
+                device=klass, duplex=duplex, arrival_rate=rate))
+        except ValueError:
+            raise ValueError(
+                f"bad cell spec {part!r}: expected "
+                f"'network[/duplex]:<N>x<class>[@rate]' "
+                f"(e.g. '3g:4xphone,wifi:2xjetson')") from None
+        get_device_class(cells[-1].device)   # fail fast on unknown classes
+    return tuple(cells)
+
+
+class Cell:
+    """Runtime state of one topology cell: its Wire, its cost model (edge
+    device class x cloud), its device slice, and the (split, transport)
+    pair its controller currently routes new arrivals to."""
+
+    def __init__(self, spec: CellSpec, index: int, wire: Wire,
+                 cost: CostModel, split: int, transport: str):
+        self.spec = spec
+        self.name = spec.name
+        self.index = index
+        self.wire = wire
+        self.cost = cost
+        self.dev_base = 0                    # set by the simulator
+        self.current_split = split
+        self.current_transport = transport
+        self.controller: Optional[object] = None
+
+    def set_split(self, split: int) -> None:
+        self.current_split = split
+
+    def set_transport(self, transport: str) -> None:
+        self.current_transport = transport
+
+
+# ---------------------------------------------------------------------------
+# arrival traces: Poisson builder + JSONL record/replay
+# ---------------------------------------------------------------------------
+
+
 @dataclass(frozen=True)
 class Arrival:
-    """One request of a pre-built arrival trace."""
+    """One request of a pre-built arrival trace.  ``device`` is the global
+    device index across the whole topology; ``cell`` the owning cell's
+    index."""
     device: int
     t: float
     tokens: Optional[np.ndarray] = None      # prompt ids (numerics mode)
+    cell: int = 0
 
 
 def poisson_arrivals(*, num_devices: int, num_requests: int,
                      arrival_rate: float, prompt_len: int,
                      vocab_size: Optional[int] = None,
-                     seed: int = 0) -> List[Arrival]:
+                     seed: int = 0, device_offset: int = 0,
+                     cell: int = 0) -> List[Arrival]:
     """THE arrival-trace builder (shared by the simulator, the CLI and
     ``benchmarks.run runtime``): deterministic per-device Poisson
     inter-arrivals, plus prompt tokens when ``vocab_size`` is given.
     Building the trace once and passing it through ``SimConfig.arrivals``
-    guarantees mode/wire/transport comparisons run the identical trace."""
+    guarantees mode/wire/transport comparisons run the identical trace.
+    ``device_offset`` shifts both the device ids and their rng streams, so
+    each cell of a topology gets independent arrivals."""
+    assert arrival_rate > 0, f"arrival_rate must be positive, got " \
+        f"{arrival_rate} (quiesce a cell with num_requests=0 instead)"
     out: List[Arrival] = []
     per_dev = [num_requests // num_devices] * num_devices
     for i in range(num_requests % num_devices):
         per_dev[i] += 1
     for dev, n in enumerate(per_dev):
-        rng = np.random.default_rng([seed, dev])
+        rng = np.random.default_rng([seed, device_offset + dev])
         t = 0.0
         for _ in range(n):
             t += rng.exponential(1.0 / arrival_rate)
@@ -76,8 +195,52 @@ def poisson_arrivals(*, num_devices: int, num_requests: int,
             if vocab_size:
                 tokens = rng.integers(0, vocab_size, size=(prompt_len,),
                                       dtype=np.int64).astype(np.int32)
-            out.append(Arrival(dev, t, tokens))
+            out.append(Arrival(device_offset + dev, t, tokens, cell))
     return out
+
+
+TRACE_FORMAT = "arrival-trace-v1"
+
+
+def record_arrivals(arrivals: Sequence[Arrival], path: str) -> None:
+    """Write an arrival stream to JSONL (one line per arrival, preceded by
+    a format header).  Floats round-trip exactly (json uses shortest-repr),
+    so record -> replay -> record is byte-identical."""
+    with open(path, "w") as f:
+        f.write(json.dumps({"format": TRACE_FORMAT,
+                            "n": len(arrivals)}) + "\n")
+        for a in arrivals:
+            tokens = None if a.tokens is None else \
+                [int(x) for x in np.asarray(a.tokens)]
+            f.write(json.dumps({"cell": a.cell, "device": a.device,
+                                "t": a.t, "tokens": tokens},
+                               sort_keys=True) + "\n")
+
+
+def trace_arrivals(path: str) -> List[Arrival]:
+    """Rebuild the identical Arrival list from a recorded JSONL trace."""
+    with open(path) as f:
+        header = json.loads(f.readline())
+        assert header.get("format") == TRACE_FORMAT, \
+            f"{path}: not an arrival trace (header {header!r})"
+        out: List[Arrival] = []
+        for line in f:
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            tokens = rec.get("tokens")
+            if tokens is not None:
+                tokens = np.asarray(tokens, np.int32)
+            out.append(Arrival(device=rec["device"], t=rec["t"],
+                               tokens=tokens, cell=rec.get("cell", 0)))
+    assert len(out) == header["n"], \
+        f"{path}: truncated trace ({len(out)} of {header['n']} arrivals)"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# simulation config + driver
+# ---------------------------------------------------------------------------
 
 
 @dataclass
@@ -89,7 +252,7 @@ class SimConfig:
     network: str = "3g"                      # 3g | 4g | wifi | inter_pod
     duplex: str = "split"                    # split | shared downlink FIFO
     num_devices: int = 4
-    num_requests: int = 16
+    num_requests: int = 16                   # total across all cells
     arrival_rate: float = 20.0               # per device, requests/s
     prompt_len: int = 32
     max_new_tokens: int = 4
@@ -98,6 +261,10 @@ class SimConfig:
     candidate_splits: Optional[Sequence[int]] = None
     edge: HardwareProfile = JETSON_TX2
     cloud: HardwareProfile = GTX_1080TI
+    # a multi-cell topology overrides the single-uplink fields above
+    # (network/duplex/num_devices/edge/edge_mp); the 1-cell default IS the
+    # classic configuration, built through the same path
+    topology: Optional[Sequence[CellSpec]] = None
     # model-axis degree of each half's stage (DESIGN.md section 11): timing
     # divides by the degree, and in numerics mode the bank's jitted halves
     # really run shard_map'd over that many local devices (heterogeneous
@@ -107,6 +274,8 @@ class SimConfig:
     background_load: Optional[Callable[[float], float]] = None
     adapt: bool = False
     control_interval_s: float = 0.05
+    objective: str = "latency"               # a planner.SELECTION_OBJECTIVES key
+    slo_ms: Optional[float] = None           # SLO for energy_under_slo
     max_concurrent: int = 8
     seed: int = 0
     numerics: bool = True
@@ -129,20 +298,49 @@ class Simulation:
         self.base_cfg = base
         self.loop = EventLoop()
         self.telemetry = Telemetry()
-        self.uplink = Wire.named(c.network, duplex=c.duplex)
-        self.current_split = c.initial_split
-        self.current_transport = "cache_handoff" if c.transport == "auto" \
-            else c.transport
         self.candidates = list(c.candidate_splits) if c.candidate_splits \
             else list(range(1, base.num_layers))
-        assert c.initial_split in self.candidates, \
-            f"initial split {c.initial_split} not in {self.candidates}"
+
+        # every configuration is a topology; the classic single-uplink
+        # SimConfig fields synthesize the 1-cell special case
+        specs = tuple(c.topology) if c.topology else (CellSpec(
+            name="cell0", network=c.network, num_devices=c.num_devices,
+            device=c.edge, duplex=c.duplex, edge_mp=c.edge_mp),)
+        names = [s.name for s in specs]
+        assert len(set(names)) == len(names), f"duplicate cell names {names}"
+        self.cells: List[Cell] = []
+        wires = {}
+        edge_mps = set()
+        for i, spec in enumerate(specs):
+            key = spec.wire or spec.name
+            if key not in wires:
+                wires[key] = Wire.named(spec.network,
+                                        duplex=spec.duplex or c.duplex)
+            else:
+                assert wires[key].name == spec.network, \
+                    f"wire group {key!r} spans networks " \
+                    f"{wires[key].name!r} and {spec.network!r}"
+            split = spec.initial_split if spec.initial_split is not None \
+                else c.initial_split
+            assert split in self.candidates, \
+                f"cell {spec.name}: initial split {split} not in " \
+                f"{self.candidates}"
+            tp_mode = spec.transport or c.transport
+            assert tp_mode in ("cache_handoff", "streamed", "auto"), tp_mode
+            cost = CostModel(base, spec.hardware(), c.cloud,
+                             edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp)
+            self.cells.append(Cell(
+                spec, i, wires[key], cost, split,
+                "cache_handoff" if tp_mode == "auto" else tp_mode))
+            edge_mps.add(spec.edge_mp)
+
         self.bank = SplitModelBank(base, c.d_r, wire_mode=c.wire_mode,
-                                   seed=c.seed, edge_mp=c.edge_mp,
+                                   seed=c.seed, edge_mp=min(edge_mps),
                                    cloud_mp=c.cloud_mp) if c.numerics else None
-        self.cost = CostModel(base, c.edge, c.cloud, edge_mp=c.edge_mp,
-                              cloud_mp=c.cloud_mp)
-        self._remaining = c.num_requests
+        # cloud-side cost model (the server only charges cloud durations;
+        # cell 0's is exact for the 1-cell configuration)
+        self.cost = self.cells[0].cost
+        self._remaining = 0
         self.server = CloudServer(
             loop=self.loop, cost=self.cost, bank=self.bank, mode=c.mode,
             d_r=c.d_r, telemetry=self.telemetry,
@@ -150,42 +348,86 @@ class Simulation:
             background_load=c.background_load,
             engine_seed=c.seed,
             max_len=c.prompt_len + c.max_new_tokens + 2,
-            on_done=self._on_done, numerics_split=c.initial_split,
-            wire=self.uplink)
-        self.devices = [
-            EdgeDevice(i, loop=self.loop, cost=self.cost, uplink=self.uplink,
-                       server=self.server, bank=self.bank, mode=c.mode,
-                       wire_mode=c.wire_mode, d_r=c.d_r,
-                       telemetry=self.telemetry,
-                       numerics_split=c.initial_split)
-            for i in range(c.num_devices)]
+            on_done=self._on_done, numerics_split=self.cells[0].current_split,
+            wire=self.cells[0].wire)
+        self.devices: List[EdgeDevice] = []
+        for cell in self.cells:
+            cell.dev_base = len(self.devices)
+            for i in range(cell.spec.num_devices):
+                self.devices.append(EdgeDevice(
+                    len(self.devices), loop=self.loop, cost=cell.cost,
+                    uplink=cell.wire, server=self.server, bank=self.bank,
+                    mode=c.mode, wire_mode=c.wire_mode, d_r=c.d_r,
+                    telemetry=self.telemetry,
+                    numerics_split=cell.current_split,
+                    cell=cell.name, cell_index=cell.index))
         self.server.devices = self.devices       # downlink delivery targets
-        self.controller: Optional[object] = None
+        self.controllers: List[object] = []
         if c.adapt and c.mode == "split":
             from repro.runtime.controller import AdaptiveSplitController
-            self.controller = AdaptiveSplitController(
-                loop=self.loop, uplink=self.uplink,
-                cloud_load=self.server.current_load,
-                cfg=base, d_r=c.d_r, seq=c.prompt_len,
-                candidate_splits=self.candidates,
-                edge=c.edge, cloud=c.cloud, wire_mode=c.wire_mode,
-                telemetry=self.telemetry,
-                set_split=self._set_split, get_split=lambda: self.current_split,
-                interval_s=c.control_interval_s,
-                handoff_bytes_per_layer=(
-                    self.cost.stage0_cache_bytes(c.prompt_len, 1)
-                    if c.max_new_tokens > 1 else 0.0),
-                transport_mode=c.transport,
-                new_tokens=c.max_new_tokens,
-                set_transport=self._set_transport,
-                get_transport=lambda: self.current_transport,
-                edge_mp=c.edge_mp, cloud_mp=c.cloud_mp)
+            for cell in self.cells:
+                spec = cell.spec
+                tp_mode = spec.transport or c.transport
+                cell.controller = AdaptiveSplitController(
+                    loop=self.loop, uplink=cell.wire,
+                    cloud_load=self.server.current_load,
+                    cfg=base, d_r=c.d_r, seq=c.prompt_len,
+                    candidate_splits=self.candidates,
+                    edge=spec.hardware(), cloud=c.cloud,
+                    wire_mode=c.wire_mode,
+                    telemetry=self.telemetry,
+                    set_split=cell.set_split,
+                    get_split=lambda cell=cell: cell.current_split,
+                    interval_s=c.control_interval_s,
+                    handoff_bytes_per_layer=(
+                        cell.cost.stage0_cache_bytes(c.prompt_len, 1)
+                        if c.max_new_tokens > 1 else 0.0),
+                    objective=c.objective,
+                    slo_s=c.slo_ms / 1e3 if c.slo_ms else None,
+                    transport_mode=tp_mode,
+                    new_tokens=c.max_new_tokens,
+                    set_transport=cell.set_transport,
+                    get_transport=lambda cell=cell: cell.current_transport,
+                    edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp,
+                    cell=cell.name)
+                self.controllers.append(cell.controller)
+        self.arrivals: List[Arrival] = (
+            list(c.arrivals) if c.arrivals is not None
+            else self._build_arrivals())
+        self._validate_arrivals()
+        self._remaining = len(self.arrivals)
 
     # ------------------------------------------------------------------ api
+    @property
+    def uplink(self) -> Wire:
+        """Cell 0's Wire (THE uplink of a single-cell configuration)."""
+        return self.cells[0].wire
+
+    @property
+    def current_split(self) -> int:
+        return self.cells[0].current_split
+
+    @property
+    def current_transport(self) -> str:
+        return self.cells[0].current_transport
+
+    @property
+    def controller(self) -> Optional[object]:
+        return self.controllers[0] if self.controllers else None
+
+    def cell_of(self, device: int) -> Cell:
+        return self.cells[self.devices[device].cell_index]
+
+    def record_trace(self, path: str) -> None:
+        """Record this run's arrival stream (cell, device, t, prompt) to
+        JSONL; :func:`trace_arrivals` rebuilds the identical list, so the
+        replayed simulation is byte-for-byte identical."""
+        record_arrivals(self.arrivals, path)
+
     def run(self) -> Telemetry:
         self._schedule_arrivals()
-        if self.controller is not None:
-            self.controller.start()
+        for ctl in self.controllers:
+            ctl.start()
         self.loop.run()
         assert self._remaining == 0, \
             f"{self._remaining} requests never completed"
@@ -199,32 +441,61 @@ class Simulation:
         return self.telemetry
 
     # ------------------------------------------------------------- internals
-    def _set_split(self, split: int) -> None:
-        self.current_split = split
+    def _build_arrivals(self) -> List[Arrival]:
+        """Per-cell Poisson streams: explicit CellSpec.num_requests is
+        honored, the rest of the fleet-wide total splits evenly (remainder
+        to earlier cells) — the 1-cell case reduces to the classic
+        builder."""
+        c = self.sim_cfg
+        explicit = sum(s.spec.num_requests or 0 for s in self.cells)
+        open_cells = [cell for cell in self.cells
+                      if cell.spec.num_requests is None]
+        left = max(c.num_requests - explicit, 0)
+        share = [left // len(open_cells)] * len(open_cells) if open_cells \
+            else []
+        for i in range(left % len(open_cells) if open_cells else 0):
+            share[i] += 1
+        shares = iter(share)
+        out: List[Arrival] = []
+        for cell in self.cells:
+            spec = cell.spec
+            n = spec.num_requests if spec.num_requests is not None \
+                else next(shares)
+            out.extend(poisson_arrivals(
+                num_devices=spec.num_devices, num_requests=n,
+                arrival_rate=spec.arrival_rate
+                if spec.arrival_rate is not None else c.arrival_rate,
+                prompt_len=c.prompt_len,
+                vocab_size=self.base_cfg.vocab_size if c.numerics else None,
+                seed=c.seed, device_offset=cell.dev_base, cell=cell.index))
+        return out
 
-    def _set_transport(self, transport: str) -> None:
-        self.current_transport = transport
+    def _validate_arrivals(self) -> None:
+        for a in self.arrivals:
+            assert 0 <= a.device < len(self.devices), \
+                f"arrival device {a.device} outside the fleet " \
+                f"({len(self.devices)} devices)"
+            assert self.devices[a.device].cell_index == a.cell, \
+                f"arrival routes device {a.device} to cell {a.cell} but it " \
+                f"lives in cell {self.devices[a.device].cell_index} — " \
+                f"replayed trace does not match this topology"
 
     def _on_done(self, req: SimRequest) -> None:
         self._remaining -= 1
-        if self._remaining == 0 and self.controller is not None:
-            self.controller.stop()
+        if self._remaining == 0:
+            for ctl in self.controllers:
+                ctl.stop()
 
     def _schedule_arrivals(self) -> None:
         c = self.sim_cfg
-        arrivals = c.arrivals if c.arrivals is not None else poisson_arrivals(
-            num_devices=c.num_devices, num_requests=c.num_requests,
-            arrival_rate=c.arrival_rate, prompt_len=c.prompt_len,
-            vocab_size=self.base_cfg.vocab_size if c.numerics else None,
-            seed=c.seed)
-        self._remaining = len(arrivals)
         self.requests: List[SimRequest] = []
-        for uid, a in enumerate(arrivals):
+        for uid, a in enumerate(self.arrivals):
             assert not c.numerics or a.tokens is not None, \
                 "numerics mode needs prompt tokens in the arrival trace"
             trace = RequestTrace(
                 uid=uid, device=a.device, mode=c.mode, wire_mode=c.wire_mode,
-                split=0, prompt_len=c.prompt_len)
+                split=0, prompt_len=c.prompt_len,
+                cell=self.cells[a.cell].name)
             req = SimRequest(trace=trace, tokens=a.tokens,
                              max_new_tokens=c.max_new_tokens)
             self.requests.append(req)
@@ -233,11 +504,12 @@ class Simulation:
     def _make_arrival(self, dev: int, req: SimRequest) -> Callable[[], None]:
         def fire() -> None:
             # split and transport are pinned when the mobile starts the
-            # request — the controller's latest decision governs new
-            # arrivals only
+            # request — the owning cell's latest controller decision governs
+            # new arrivals only
+            cell = self.cell_of(dev)
             if self.sim_cfg.mode == "split":
-                req.trace.split = self.current_split
-                req.trace.transport = self.current_transport
+                req.trace.split = cell.current_split
+                req.trace.transport = cell.current_transport
             elif self.sim_cfg.mode == "edge":
                 req.trace.split = self.base_cfg.num_layers
             else:

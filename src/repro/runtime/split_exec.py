@@ -145,11 +145,9 @@ class CostModel:
         return b
 
     def stage0_cache_bytes(self, seq: int, split: int) -> float:
-        # KV bytes per edge layer: 2 (K and V) * kv_heads * head_dim
-        cfg = self.cfg
-        per_layer = 2 * seq * cfg.num_kv_heads * cfg.resolved_head_dim * \
-            act_bytes(cfg)
-        return float(per_layer * split)
+        """KV bytes of the edge stage's ``split`` layers (the cache-handoff
+        uplink term) — the arch formula lives in :func:`costs.kv_cache_bytes`."""
+        return costs.kv_cache_bytes(self.cfg, seq, split)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,7 @@ class RequestTrace:
     wire_mode: str                     # raw | reduced | int8 (split mode)
     split: int                         # partition point used (0 = no split)
     prompt_len: int
+    cell: str = "cell0"                # topology cell that emitted the request
     transport: str = "cache_handoff"   # decode transport (split mode)
     new_tokens: int = 0
     wire_bytes: float = 0.0            # uplink bytes (codes, cache, rows)
@@ -118,6 +119,7 @@ class ControlDecision:
     old_split: int
     new_split: int
     transport: str = "cache_handoff"   # decode transport picked alongside
+    cell: str = "cell0"                # which cell's controller decided
 
 
 class Telemetry:
@@ -170,20 +172,71 @@ class Telemetry:
     def split_trajectory(self) -> List[Dict[str, float]]:
         return [{"t": d.t, "cloud_load": d.cloud_load,
                  "link_bytes_per_s": d.link_bytes_per_s,
-                 "split": d.new_split, "transport": d.transport}
+                 "split": d.new_split, "transport": d.transport,
+                 "cell": d.cell}
                 for d in self.decisions]
 
+    # -- per-cell aggregates / fairness -------------------------------------
+    @property
+    def cells(self) -> List[str]:
+        """Cell names in first-trace order (stable across replays)."""
+        seen: List[str] = []
+        for t in self.traces:
+            if t.cell not in seen:
+                seen.append(t.cell)
+        return seen
+
+    def cell_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-cell latency/energy/bytes aggregates — the per-cell view the
+        fairness report (and the topology benchmark) is built from."""
+        out: Dict[str, Dict[str, float]] = {}
+        for cell in self.cells:
+            ts = [t for t in self.traces if t.cell == cell]
+            lat = [t.latency_s for t in ts]
+            out[cell] = {
+                "n_requests": len(ts),
+                "latency_p50_ms": percentile(lat, 50) * 1e3,
+                "latency_p95_ms": percentile(lat, 95) * 1e3,
+                "latency_mean_ms": sum(lat) / len(lat) * 1e3,
+                "mean_uplink_wait_ms": sum(
+                    t.uplink_wait_s for t in ts) / len(ts) * 1e3,
+                "mean_wire_kb": sum(t.wire_bytes for t in ts) / len(ts) / 1e3,
+                "downlink_kb": sum(t.downlink_bytes for t in ts) / 1e3,
+                "mean_mobile_energy_mj": sum(
+                    t.mobile_energy_mj for t in ts) / len(ts),
+            }
+        return out
+
+    def fairness(self) -> Dict[str, float]:
+        """Topology-level fairness across cells: max/min spread of the mean
+        and p95 latencies plus Jain's fairness index over per-cell mean
+        latency (1.0 = perfectly even service, ->1/n as one cell starves).
+        Single-cell runs are trivially fair."""
+        cells = self.cell_summary()
+        means = [c["latency_mean_ms"] for c in cells.values()]
+        p95s = [c["latency_p95_ms"] for c in cells.values()]
+        if not means:
+            return {}
+        sq = sum(m * m for m in means)
+        return {
+            "n_cells": len(means),
+            "max_min_latency_ratio": max(means) / max(min(means), 1e-12),
+            "p95_spread_ms": max(p95s) - min(p95s),
+            "jain_index": (sum(means) ** 2) / max(len(means) * sq, 1e-12),
+        }
+
     # -- rendering ----------------------------------------------------------
-    _COLS = ("uid", "dev", "split", "tport", "S", "edgeq_ms", "edge_ms",
-             "upwait_ms", "uplink_ms", "cloudq_ms", "cloud_ms", "dlink_ms",
-             "total_ms", "wire_kb", "down_b", "energy_mj")
+    _COLS = ("uid", "dev", "cell", "split", "tport", "S", "edgeq_ms",
+             "edge_ms", "upwait_ms", "uplink_ms", "cloudq_ms", "cloud_ms",
+             "dlink_ms", "total_ms", "wire_kb", "down_b", "energy_mj")
 
     def table(self) -> str:
         """Per-request latency-breakdown table (the CLI's main output)."""
         rows = [" ".join(f"{c:>9s}" for c in self._COLS)]
         for t in self.traces:
             tport = "stream" if t.transport == "streamed" else "handoff"
-            vals = (t.uid, t.device, t.split, tport, t.prompt_len,
+            vals = (t.uid, t.device, t.cell[:9], t.split, tport,
+                    t.prompt_len,
                     t.edge_queue_s * 1e3, t.edge_compute_s * 1e3,
                     t.uplink_wait_s * 1e3, t.uplink_s * 1e3,
                     t.cloud_queue_s * 1e3, t.cloud_s * 1e3,
@@ -199,6 +252,8 @@ class Telemetry:
     def to_json(self) -> str:
         return json.dumps({
             "summary": self.summary(),
+            "cells": self.cell_summary(),
+            "fairness": self.fairness(),
             "counters": dict(self.counters),
             "decisions": self.split_trajectory(),
             "traces": [dict(asdict(t), **{k: round(v, 9) for k, v in

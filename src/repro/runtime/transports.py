@@ -98,7 +98,7 @@ class StreamedTransport(DecodeTransport):
         req.edge_pos = t.prompt_len
         if device.bank is not None and req.payload is not None:
             codes, scales, cache0 = req.payload
-            runner = device.bank.runner(t.split)
+            runner = device.runner(t.split)
             req.edge_cache = runner.pad_decode_cache(
                 cache0, 0, device.server.max_len)
             req.payload = (codes, scales, None)
@@ -132,7 +132,7 @@ class StreamedTransport(DecodeTransport):
         t = req.trace
         now = device.loop.now
         if device.bank is not None:
-            runner = device.bank.runner(t.split)
+            runner = device.runner(t.split)
             tok = np.asarray([[req.last_token]], np.int32)
             payload, scales, req.edge_cache = runner.edge_step(
                 runner.params, tok, req.edge_cache, [req.edge_pos])
@@ -193,9 +193,10 @@ class StreamedTransport(DecodeTransport):
         t = req.trace
         now = server.loop.now
         req.produced += 1
+        wire = server.wire_for(req)
         t.downlink_bytes += TOKEN_BYTES
-        start, done = server.wire.transfer_down(TOKEN_BYTES, now)
-        t.mobile_energy_mj += server.wire.downlink_energy_mj(TOKEN_BYTES)
+        start, done = wire.transfer_down(TOKEN_BYTES, now)
+        t.mobile_energy_mj += wire.downlink_energy_mj(TOKEN_BYTES)
         if req.produced >= req.max_new_tokens:
             t.t_cloud_done = now
             if req.slot >= 0:

@@ -18,11 +18,19 @@ request completion for the cache-handoff decode transport, one id per
 generation step for the streamed transport — which is what makes the
 per-token RTT (uplink row + cloud turn + downlink id) a first-class
 quantity here (:meth:`Wire.rtt_s`).
+
+Goodput feedback is *windowed*: :meth:`observed_bytes_per_s` reports the
+effective rate over the trailing ``window_s`` seconds, so a load transient
+that saturated the link stops poisoning the controller's signal once it
+drains (the lifetime totals stay in ``stats``/``down_stats`` for
+telemetry).  In a multi-cell topology each cell owns its own Wire, so the
+contention — and this feedback — is per cell.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Deque, Optional, Tuple
 
 from repro.core.wireless import get_link
 
@@ -41,19 +49,25 @@ class Wire:
     devices.  ``stats`` accounts the uplink, ``down_stats`` the downlink."""
 
     def __init__(self, link_model, name: Optional[str] = None,
-                 duplex: str = "split"):
+                 duplex: str = "split", window_s: float = 0.5):
         assert duplex in ("split", "shared"), duplex
         self.model = link_model
         self.name = name or getattr(link_model, "name", "link")
         self.duplex = duplex
+        self.window_s = window_s
         self.free_at = 0.0                  # uplink frontier
         self.down_free_at = 0.0             # downlink frontier
         self.stats = LinkStats()
         self.down_stats = LinkStats()
+        # trailing-window samples per direction: (done, nbytes, occupied_s)
+        self._recent_up: Deque[Tuple[float, float, float]] = deque()
+        self._recent_down: Deque[Tuple[float, float, float]] = deque()
 
     @classmethod
-    def named(cls, name: str, duplex: str = "split") -> "Wire":
-        return cls(get_link(name), name=name, duplex=duplex)
+    def named(cls, name: str, duplex: str = "split",
+              window_s: float = 0.5) -> "Wire":
+        return cls(get_link(name), name=name, duplex=duplex,
+                   window_s=window_s)
 
     # ------------------------------------------------------------- durations
     def transfer_seconds(self, nbytes: float) -> float:
@@ -89,8 +103,8 @@ class Wire:
         self.free_at = done
         if self.duplex == "shared":
             self.down_free_at = done
-        self._account(self.stats, nbytes, dur, start - now,
-                      self.transfer_energy_mj(nbytes))
+        self._account(self.stats, self._recent_up, done, nbytes, dur,
+                      start - now, self.transfer_energy_mj(nbytes))
         return start, done
 
     def transfer_down(self, nbytes: float, now: float) -> Tuple[float, float]:
@@ -103,18 +117,20 @@ class Wire:
         self.down_free_at = done
         if self.duplex == "shared":
             self.free_at = done
-        self._account(self.down_stats, nbytes, dur, start - now,
-                      self.downlink_energy_mj(nbytes))
+        self._account(self.down_stats, self._recent_down, done, nbytes, dur,
+                      start - now, self.downlink_energy_mj(nbytes))
         return start, done
 
     @staticmethod
-    def _account(s: LinkStats, nbytes: float, dur: float, wait: float,
+    def _account(s: LinkStats, recent: Deque[Tuple[float, float, float]],
+                 done: float, nbytes: float, dur: float, wait: float,
                  energy: float) -> None:
         s.bytes_sent += nbytes
         s.busy_s += dur
         s.wait_s += wait
         s.energy_mj += energy
         s.n_transfers += 1
+        recent.append((done, nbytes, dur + wait))
 
     # ------------------------------------------------------------- goodput
     def nominal_bytes_per_s(self) -> float:
@@ -124,21 +140,25 @@ class Wire:
         return 1.0 / max(self.downlink_seconds(1.0), 1e-30)
 
     def observed_bytes_per_s(self, now: float) -> float:
-        """Effective per-request uplink goodput including contention waits —
-        what a device actually experiences, and what the adaptive controller
-        feeds back into the selection phase."""
-        return self._observed(self.stats, self.nominal_bytes_per_s())
+        """Effective per-request uplink goodput including contention waits
+        over the trailing ``window_s`` — what a device experiences *right
+        now*, and what the adaptive controller feeds back into the selection
+        phase.  A quiet link (no transfers in the window) reads nominal: a
+        cleared transient no longer drags a lifetime average behind it."""
+        return self._observed(self._recent_up, self.nominal_bytes_per_s(),
+                              now)
 
     def observed_down_bytes_per_s(self, now: float) -> float:
-        return self._observed(self.down_stats, self.nominal_down_bytes_per_s())
+        return self._observed(self._recent_down,
+                              self.nominal_down_bytes_per_s(), now)
 
-    @staticmethod
-    def _observed(s: LinkStats, nominal: float) -> float:
-        occupied = s.busy_s + s.wait_s
-        if s.n_transfers == 0 or occupied <= 0:
+    def _observed(self, recent: Deque[Tuple[float, float, float]],
+                  nominal: float, now: float) -> float:
+        horizon = now - self.window_s
+        while recent and recent[0][0] < horizon:
+            recent.popleft()
+        nbytes = sum(b for _, b, _ in recent)
+        occupied = sum(o for _, _, o in recent)
+        if not recent or occupied <= 0:
             return nominal
-        return s.bytes_sent / occupied
-
-
-# historical name: the runtime grew a downlink, the class kept working
-Uplink = Wire
+        return nbytes / occupied

@@ -14,7 +14,7 @@ from repro.core.wireless import NETWORKS, get_link
 from repro.runtime.clock import EventLoop
 from repro.runtime.simulator import SimConfig, Simulation, ramp_load
 from repro.runtime.telemetry import percentile
-from repro.runtime.wire import Uplink
+from repro.runtime.wire import Wire
 
 
 def small_cfg(layers=4):
@@ -66,7 +66,7 @@ def test_event_loop_rejects_past_and_nested_schedules_run():
 
 def test_uplink_contention_serializes_transfers():
     net = NETWORKS["3g"]
-    up = Uplink(net)
+    up = Wire(net)
     nbytes = 11_000                       # 11kB over 1.1Mbps = 80ms
     dur = net.uplink_seconds(nbytes)
     s1, d1 = up.transfer(nbytes, 0.0)

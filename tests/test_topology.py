@@ -1,0 +1,462 @@
+"""Multi-cell topologies: heterogeneous fleets, per-cell adaptive control,
+trace replay, windowed goodput feedback, and pluggable controller
+objectives.
+
+The load-bearing invariants:
+  * a 1-cell Topology reproduces the classic single-uplink SimConfig
+    telemetry exactly (same seed -> identical latency/energy/decision log)
+  * record -> replay is byte-for-byte deterministic
+  * per-cell contention is isolated (saturating cell A's 3g uplink leaves
+    cell B's wifi wait at 0) while all cells share one cloud
+  * per-cell controllers diverge when their cells' conditions differ
+  * the Wire's goodput feedback is windowed: the controller re-adapts after
+    a load transient clears (a lifetime average never recovers)
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import (SELECTION_OBJECTIVES, register_objective,
+                                select_split_online)
+from repro.core.profiler import (DEVICE_CLASSES, JETSON_TX2, PHONE_NPU,
+                                 get_device_class)
+from repro.core.wireless import NETWORKS
+from repro.runtime.clock import EventLoop
+from repro.runtime.controller import AdaptiveSplitController
+from repro.runtime.simulator import (Arrival, CellSpec, SimConfig, Simulation,
+                                     parse_topology, poisson_arrivals,
+                                     record_arrivals, trace_arrivals)
+from repro.runtime.split_exec import CostModel
+from repro.runtime.telemetry import Telemetry
+from repro.runtime.wire import Wire
+
+
+def small_cfg(layers=4):
+    return dataclasses.replace(get_config("qwen3-8b").reduced(),
+                               num_layers=layers)
+
+
+def timing_cfg(**kw):
+    defaults = dict(cfg=small_cfg(), mode="split", wire_mode="int8",
+                    network="3g", num_devices=4, num_requests=16,
+                    arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
+                    d_r=16, numerics=False, seed=0)
+    defaults.update(kw)
+    return SimConfig(**defaults)
+
+
+MIXED = (CellSpec(name="3g0", network="3g", num_devices=4, device="jetson"),
+         CellSpec(name="wifi1", network="wifi", num_devices=4,
+                  device="phone"))
+
+
+def trace_key(tel):
+    return [(t.uid, t.device, t.cell, t.split, t.transport,
+             t.t_arrival, t.t_edge_start, t.t_edge_done, t.t_uplink_start,
+             t.t_uplink_done, t.t_cloud_start, t.t_first_token,
+             t.t_cloud_done, t.t_done, t.wire_bytes, t.downlink_bytes,
+             t.mobile_energy_mj) for t in tel.traces]
+
+
+def decision_key(tel):
+    return [(d.t, d.cell, d.cloud_load, d.link_bytes_per_s, d.old_split,
+             d.new_split, d.transport) for d in tel.decisions]
+
+
+# ---------------------------------------------------------------------------
+# topology spec grammar + device classes
+# ---------------------------------------------------------------------------
+
+
+def test_parse_topology_grammar():
+    cells = parse_topology("3g:4xphone,wifi:2xjetson")
+    assert [c.name for c in cells] == ["3g0", "wifi1"]
+    assert cells[0].num_devices == 4 and cells[0].device == "phone"
+    assert cells[1].num_devices == 2 and cells[1].device == "jetson"
+    one = parse_topology("4g/shared:8xphone@30.5")[0]
+    assert one.duplex == "shared" and one.arrival_rate == 30.5
+    with pytest.raises(ValueError):
+        parse_topology("3g:phone")               # missing <N>x
+    with pytest.raises(KeyError):
+        parse_topology("3g:4xmainframe")         # unknown device class
+
+
+def test_device_classes_resolve():
+    assert get_device_class("jetson") is JETSON_TX2
+    assert get_device_class("phone") is PHONE_NPU
+    assert get_device_class(PHONE_NPU) is PHONE_NPU
+    assert PHONE_NPU.flops < JETSON_TX2.flops    # the weak end of the fleet
+    assert set(DEVICE_CLASSES) >= {"phone", "jetson"}
+    with pytest.raises(KeyError):
+        get_device_class("mainframe")
+
+
+# ---------------------------------------------------------------------------
+# single-cell equivalence: the classic config IS the 1-cell topology
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("adapt", [False, True])
+def test_single_cell_topology_equivalence(adapt):
+    """A 1-cell Topology must reproduce the classic
+    SimConfig(network=..., num_devices=...) run exactly: same seed ->
+    identical latency/energy traces and decision log."""
+    kw = dict(num_requests=24, max_new_tokens=4, adapt=adapt,
+              control_interval_s=0.02)
+    legacy = Simulation(timing_cfg(**kw)).run()
+    one_cell = (CellSpec(name="cell0", network="3g", num_devices=4,
+                         device="jetson"),)
+    topo = Simulation(timing_cfg(topology=one_cell, **kw)).run()
+    assert trace_key(legacy) == trace_key(topo)
+    assert decision_key(legacy) == decision_key(topo)
+    assert legacy.summary() == topo.summary()
+    if adapt:
+        assert legacy.decisions, "controller never ran"
+
+
+def test_single_cell_topology_equivalence_numerics():
+    """Numerics mode too: identical greedy tokens through both paths."""
+    kw = dict(cfg=small_cfg(layers=2), num_devices=2, num_requests=4,
+              prompt_len=16, max_new_tokens=2, max_concurrent=2,
+              numerics=True)
+    legacy_sim = Simulation(timing_cfg(**kw))
+    legacy = legacy_sim.run()
+    topo_sim = Simulation(timing_cfg(
+        topology=(CellSpec(name="cell0", network="3g", num_devices=2,
+                           device="jetson"),), **kw))
+    topo = topo_sim.run()
+    assert trace_key(legacy) == trace_key(topo)
+    assert [list(r.engine_req.generated) for r in legacy_sim.requests] == \
+        [list(r.engine_req.generated) for r in topo_sim.requests]
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+
+
+def multi_cell_cfg(**kw):
+    defaults = dict(topology=MIXED, num_requests=32, prompt_len=64,
+                    max_new_tokens=8, adapt=True, transport="auto",
+                    control_interval_s=0.02,
+                    background_load=lambda t: 0.95)
+    defaults.update(kw)
+    return timing_cfg(**defaults)
+
+
+def test_record_replay_is_byte_identical(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    sim = Simulation(multi_cell_cfg())
+    sim.record_trace(str(path))
+    tel = sim.run()
+
+    replay_sim = Simulation(multi_cell_cfg(arrivals=trace_arrivals(str(path))))
+    tel2 = replay_sim.run()
+    # identical telemetry: every timestamp, per-cell byte count, decision
+    assert trace_key(tel) == trace_key(tel2)
+    assert decision_key(tel) == decision_key(tel2)
+    assert tel.cell_summary() == tel2.cell_summary()
+    assert tel.to_json() == tel2.to_json()
+    for t in tel2.traces:
+        assert sum(t.breakdown().values()) == pytest.approx(t.latency_s,
+                                                            abs=1e-12)
+    # record -> replay -> record round-trips the file bytes exactly
+    path2 = tmp_path / "trace2.jsonl"
+    replay_sim.record_trace(str(path2))
+    assert path.read_bytes() == path2.read_bytes()
+
+
+def test_trace_tokens_round_trip(tmp_path):
+    """Numerics traces carry the prompt ids exactly."""
+    arr = poisson_arrivals(num_devices=2, num_requests=6, arrival_rate=20.0,
+                           prompt_len=8, vocab_size=512, seed=3,
+                           device_offset=2, cell=1)
+    path = tmp_path / "t.jsonl"
+    record_arrivals(arr, str(path))
+    back = trace_arrivals(str(path))
+    assert len(back) == len(arr)
+    for a, b in zip(arr, back):
+        assert (a.device, a.cell, a.t) == (b.device, b.cell, b.t)
+        assert b.tokens.dtype == np.int32
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_replay_rejects_mismatched_topology(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    sim = Simulation(multi_cell_cfg())
+    sim.record_trace(str(path))
+    arrivals = trace_arrivals(str(path))
+    with pytest.raises(AssertionError,
+                       match="outside the fleet|does not match"):
+        Simulation(timing_cfg(arrivals=arrivals))     # 1-cell, 4 devices
+    with pytest.raises(AssertionError, match="does not match"):
+        # right device count, wrong cell layout (8 devices in one cell)
+        Simulation(timing_cfg(num_devices=8, arrivals=arrivals))
+    with pytest.raises(AssertionError, match="not an arrival trace"):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text('{"nope": 1}\n')
+        trace_arrivals(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# per-cell contention isolation + shared-cloud coupling
+# ---------------------------------------------------------------------------
+
+
+def test_contention_isolated_per_cell():
+    """Saturating cell A's 3g uplink must not add a microsecond of wait to
+    cell B's wifi — each cell owns its radio."""
+    topo = (CellSpec(name="3gA", network="3g", num_devices=4,
+                     device="jetson", arrival_rate=500.0, num_requests=24),
+            CellSpec(name="wifiB", network="wifi", num_devices=2,
+                     device="jetson", arrival_rate=5.0, num_requests=8))
+    sim = Simulation(timing_cfg(topology=topo, num_requests=32))
+    tel = sim.run()
+    a_wire, b_wire = sim.cells[0].wire, sim.cells[1].wire
+    assert a_wire is not b_wire
+    assert a_wire.stats.wait_s > 0, "3g cell never contended"
+    assert b_wire.stats.wait_s == 0.0
+    for t in tel.traces:
+        if t.cell == "wifiB":
+            assert t.uplink_wait_s == 0.0
+    assert {t.cell for t in tel.traces} == {"3gA", "wifiB"}
+    assert sum(1 for t in tel.traces if t.cell == "3gA") == 24
+
+
+def test_shared_wire_group_couples_cells():
+    """Cells in one wire group share a single physical Wire: the same fleet
+    forced through one congested 3g uplink contends cross-cell."""
+    shared = (CellSpec(name="3gA", network="3g", num_devices=4,
+                       device="jetson", arrival_rate=500.0, num_requests=24,
+                       wire="ur"),
+              CellSpec(name="B", network="3g", num_devices=2,
+                       device="phone", arrival_rate=5.0, num_requests=8,
+                       wire="ur"))
+    sim = Simulation(timing_cfg(topology=shared, num_requests=32))
+    tel = sim.run()
+    assert sim.cells[0].wire is sim.cells[1].wire
+    b_waits = [t.uplink_wait_s for t in tel.traces if t.cell == "B"]
+    assert max(b_waits) > 0, "shared wire never queued cell B behind cell A"
+
+
+def test_cross_cell_cloud_congestion_is_shared():
+    """All cells contend for ONE CloudServer: a single cell's burst raises
+    the load every cell's controller observes."""
+    topo = (CellSpec(name="busy", network="wifi", num_devices=8,
+                     device="jetson", arrival_rate=2000.0, num_requests=40),
+            CellSpec(name="idle", network="wifi", num_devices=1,
+                     device="jetson", arrival_rate=1.0, num_requests=2))
+    sim = Simulation(timing_cfg(topology=topo, num_requests=42,
+                                max_new_tokens=8, max_concurrent=4,
+                                adapt=True, control_interval_s=0.005))
+    tel = sim.run()
+    idle_loads = [d.cloud_load for d in tel.decisions if d.cell == "idle"]
+    assert max(idle_loads) > 0, \
+        "idle cell's controller never saw the busy cell's occupancy"
+    assert sim.server.peak_active <= 4
+
+
+# ---------------------------------------------------------------------------
+# per-cell adaptive control: heterogeneous cells diverge
+# ---------------------------------------------------------------------------
+
+
+def final_decisions(sim, tel):
+    out = {}
+    for cell in sim.cells:
+        ds = [d for d in tel.decisions if d.cell == cell.name]
+        assert ds, f"cell {cell.name} never decided"
+        out[cell.name] = (ds[-1].new_split, ds[-1].transport)
+    return out
+
+
+def test_per_cell_controllers_diverge():
+    """The checked-in topology benchmark's scenario: jetson-class gateways
+    on a 3g backhaul vs phones on home wifi, one congested cloud.  The 3g
+    cell settles on a deeper split than the wifi cell (its fast edge
+    carries more of the congested cloud's work), and requests admitted
+    after settling actually carry the per-cell splits."""
+    sim = Simulation(multi_cell_cfg())
+    tel = sim.run()
+    finals = final_decisions(sim, tel)
+    split_3g, _ = finals["3g0"]
+    split_wifi, _ = finals["wifi1"]
+    assert split_3g > split_wifi
+    late = max(t.t_arrival for t in tel.traces) * 0.5
+    late_3g = {t.split for t in tel.traces
+               if t.cell == "3g0" and t.t_arrival > late}
+    late_wifi = {t.split for t in tel.traces
+                 if t.cell == "wifi1" and t.t_arrival > late}
+    assert late_3g == {split_3g} and late_wifi == {split_wifi}
+
+
+def test_fairness_report():
+    sim = Simulation(multi_cell_cfg())
+    tel = sim.run()
+    cells = tel.cell_summary()
+    assert set(cells) == {"3g0", "wifi1"}
+    assert sum(c["n_requests"] for c in cells.values()) == len(tel.traces)
+    fair = tel.fairness()
+    assert fair["n_cells"] == 2
+    assert fair["max_min_latency_ratio"] >= 1.0
+    assert fair["p95_spread_ms"] >= 0.0
+    assert 0.5 <= fair["jain_index"] <= 1.0      # n=2: jain in [1/2, 1]
+    # a single-cell run is trivially fair
+    single = Simulation(timing_cfg()).run().fairness()
+    assert single["n_cells"] == 1
+    assert single["jain_index"] == pytest.approx(1.0)
+    assert single["max_min_latency_ratio"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# windowed goodput feedback (the observed_bytes_per_s(now) fix)
+# ---------------------------------------------------------------------------
+
+
+def test_observed_goodput_window_forgets_cleared_transient():
+    net = NETWORKS["3g"]
+    w = Wire(net, window_s=0.5)
+    nominal = w.nominal_bytes_per_s()
+    nbytes, n = 11_000, 20
+    for _ in range(n):                       # burst at t=0: deep FIFO queue
+        w.transfer(nbytes, 0.0)
+    congested = w.observed_bytes_per_s(w.free_at)
+    assert congested < nominal / 5           # waits crush the goodput
+    # lifetime totals keep the whole history for telemetry ...
+    assert w.stats.n_transfers == n
+    assert w.stats.bytes_sent == n * nbytes
+    assert w.stats.wait_s > 0
+    # ... but once the transient drains past the window, the signal recovers
+    assert w.observed_bytes_per_s(w.free_at + w.window_s + 1e-9) == nominal
+    # and an uncontended transfer long after reads nominal, not the average
+    quiet_t = w.free_at + 10.0
+    w.transfer(nbytes, quiet_t)
+    assert w.observed_bytes_per_s(quiet_t + 1.0) == pytest.approx(nominal)
+    assert w.stats.n_transfers == n + 1      # totals still accumulate
+
+
+def test_controller_readapts_after_transient_clears():
+    """Regression for the lifetime-average feedback bug: a transient that
+    saturates the uplink flips the pick (cache handoff's KV shipment stops
+    paying off), and once the transient drains past the window the
+    controller must return to its pre-transient decision."""
+    cfg = small_cfg()
+    cloud = PHONE_NPU.scaled(1000, "big_cloud")
+    wire = Wire(NETWORKS["wifi"], window_s=0.5)
+    cost = CostModel(cfg, PHONE_NPU, cloud)
+    tel = Telemetry()
+    state = {"split": 1, "transport": "cache_handoff"}
+    ctl = AdaptiveSplitController(
+        loop=EventLoop(), uplink=wire, cloud_load=lambda t: 0.0,
+        cfg=cfg, d_r=16, seq=8, candidate_splits=[1, 2, 3],
+        edge=PHONE_NPU, cloud=cloud, wire_mode="int8", telemetry=tel,
+        set_split=lambda s: state.update(split=s),
+        get_split=lambda: state["split"],
+        handoff_bytes_per_layer=cost.stage0_cache_bytes(8, 1),
+        transport_mode="auto", new_tokens=64,
+        set_transport=lambda t: state.update(transport=t),
+        get_transport=lambda: state["transport"])
+    ctl.decide(0.0)
+    before = dict(state)
+    assert before["transport"] == "cache_handoff"    # fat pipe: ship the KV
+    # transient: a burst saturates the uplink, observed goodput collapses
+    for _ in range(60):
+        wire.transfer(11_800, 0.0)
+    ctl.decide(wire.free_at)
+    during = dict(state)
+    assert during["transport"] == "streamed"         # KV unaffordable now
+    assert tel.decisions[-1].link_bytes_per_s < \
+        wire.nominal_bytes_per_s() / 5
+    # transient clears: past the window the controller re-adapts.  With the
+    # old lifetime average the goodput — and the pick — never recovered.
+    t_clear = wire.free_at + wire.window_s + 1e-6
+    ctl.decide(t_clear)
+    assert dict(state) == before
+    assert tel.decisions[-1].link_bytes_per_s == \
+        pytest.approx(wire.nominal_bytes_per_s())
+
+
+# ---------------------------------------------------------------------------
+# pluggable selection objectives
+# ---------------------------------------------------------------------------
+
+
+def objective_kw(cloud_load=0.95):
+    return dict(candidate_splits=[1, 2, 3], edge=JETSON_TX2,
+                cloud=JETSON_TX2.scaled(10), cloud_load=cloud_load,
+                link_bytes_per_s=NETWORKS["wifi"].uplink_mbps * 1e6 / 8,
+                link_energy_mj_per_byte=1e-3)
+
+
+def test_energy_under_slo_objective():
+    cfg = small_cfg()
+    lat_best, rows = select_split_online(cfg, 32, 16, objective="latency",
+                                         **objective_kw())
+    en_best, _ = select_split_online(cfg, 32, 16, objective="energy",
+                                     **objective_kw())
+    # congested cloud: latency wants depth, energy wants the shallow edge
+    assert en_best["split"] < lat_best["split"]
+    # a loose SLO admits everything -> the energy winner
+    loose, _ = select_split_online(cfg, 32, 16, objective="energy_under_slo",
+                                   slo_s=10 * lat_best["latency_s"],
+                                   **objective_kw())
+    assert loose["split"] == en_best["split"]
+    # an SLO only the latency winner meets forces the deep split even
+    # though it costs more energy
+    tight_slo = min(r["latency_s"] for r in rows) * 1.0001
+    tight, _ = select_split_online(cfg, 32, 16, objective="energy_under_slo",
+                                   slo_s=tight_slo, **objective_kw())
+    assert tight["split"] == lat_best["split"]
+    assert tight["energy_mj"] > loose["energy_mj"]
+    # impossible SLO: best-effort fallback is the least-infeasible row
+    hopeless, _ = select_split_online(cfg, 32, 16,
+                                      objective="energy_under_slo",
+                                      slo_s=1e-12, **objective_kw())
+    assert hopeless["split"] == lat_best["split"]
+    # the SLO is mandatory for this objective
+    with pytest.raises(AssertionError):
+        select_split_online(cfg, 32, 16, objective="energy_under_slo",
+                            **objective_kw())
+
+
+def test_objective_registry_is_pluggable():
+    cfg = small_cfg()
+    with pytest.raises(KeyError, match="unknown selection objective"):
+        select_split_online(cfg, 32, 16, objective="vibes", **objective_kw())
+    assert {"latency", "energy", "energy_under_slo"} <= \
+        set(SELECTION_OBJECTIVES)
+    register_objective("deepest", lambda rows, slo_s=None: max(
+        rows, key=lambda r: r["split"]))
+    try:
+        best, _ = select_split_online(cfg, 32, 16, objective="deepest",
+                                      **objective_kw())
+        assert best["split"] == 3
+    finally:
+        del SELECTION_OBJECTIVES["deepest"]
+
+
+def test_energy_under_slo_closed_loop():
+    """End to end: under a congested cloud the SLO-bound controller holds
+    the deep (fast) split while the unconstrained energy objective drops to
+    the shallow low-energy one."""
+    kw = dict(num_requests=24, max_new_tokens=1, adapt=True,
+              control_interval_s=0.02, cloud=JETSON_TX2.scaled(10),
+              background_load=lambda t: 0.95)
+    en = Simulation(timing_cfg(objective="energy", **kw)).run()
+    lat = Simulation(timing_cfg(objective="latency", **kw)).run()
+    assert en.decisions[-1].new_split < lat.decisions[-1].new_split
+    # an SLO between the deep pick's predicted latency and the shallow
+    # pick's: the controller must spend energy to make the deadline
+    _, rows = select_split_online(
+        small_cfg(), 32, 16, candidate_splits=[1, 2, 3], edge=JETSON_TX2,
+        cloud=JETSON_TX2.scaled(10), cloud_load=0.95,
+        link_bytes_per_s=NETWORKS["3g"].uplink_mbps * 1e6 / 8)
+    lats = sorted(r["latency_s"] for r in rows)
+    slo_ms = (lats[0] + lats[1]) / 2 * 1e3
+    slo = Simulation(timing_cfg(objective="energy_under_slo", slo_ms=slo_ms,
+                                **kw)).run()
+    assert slo.decisions[-1].new_split > en.decisions[-1].new_split
+    assert slo.decisions[-1].new_split == lat.decisions[-1].new_split
