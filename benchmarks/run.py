@@ -316,7 +316,9 @@ def bench_runtime():
     base = SimConfig(cfg=cfg, network="3g", num_devices=4, num_requests=32,
                      arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
                      d_r=16, numerics=False, seed=0)
-    result = {"workload": {"arch": cfg.name, "layers": cfg.num_layers,
+    from repro.runtime.telemetry import SCHEMA_VERSION
+    result = {"schema_version": SCHEMA_VERSION,
+              "workload": {"arch": cfg.name, "layers": cfg.num_layers,
                            "devices": 4, "requests": 32, "prompt_len": 32,
                            "d_r": 16}, "networks": {}}
     t0 = time.perf_counter()
@@ -330,10 +332,13 @@ def bench_runtime():
                                      wire_mode=wm)
             s = Simulation(sc).run().summary()
             row[label] = {"latency_p50_ms": round(s["latency_p50_ms"], 3),
+                          "latency_p95_ms": round(s["latency_p95_ms"], 3),
                           "latency_p99_ms": round(s["latency_p99_ms"], 3),
                           "mean_wire_kb": round(s["mean_wire_kb"], 3),
                           "mean_mobile_energy_mj":
                               round(s["mean_mobile_energy_mj"], 3)}
+            if s["throughput_rps"] == s["throughput_rps"]:  # skip NaN
+                row[label]["throughput_rps"] = round(s["throughput_rps"], 2)
         row["split_speedup_vs_cloud"] = round(
             row["cloud_only"]["latency_p50_ms"] /
             row["split_int8"]["latency_p50_ms"], 2)

@@ -76,8 +76,9 @@ def runtime_closed_loop():
                    d_r=16, adapt=True, control_interval_s=0.02,
                    cloud=JETSON_TX2.scaled(10, "cloud_slice"),
                    background_load=ramp_load(0.0, 0.25, 0.0, 0.97),
-                   numerics=False)
-    tel = Simulation(sc).run()
+                   numerics=False, metrics=True, metrics_interval_s=0.05)
+    sim = Simulation(sc)
+    tel = sim.run()
     print("\nclosed-loop runtime (4-layer qwen3, cloud = 10x edge, "
           "load ramp 0 -> 97%):")
     print(f"  {'t':>7s} {'load':>7s} {'split':>6s}")
@@ -86,6 +87,19 @@ def runtime_closed_loop():
         if d.new_split != last:
             print(f"  {d.t:6.2f}s {d.cloud_load:7.1%} {d.new_split:>6d}")
             last = d.new_split
+    # the same ramp seen through the metrics sampler (SimConfig(metrics=True)):
+    # queue depth and uplink goodput around the moment the controller moves
+    wire_key = next(iter(sim.wires))
+    print(f"  metrics timeline ({len(sim.sampler.rows)} samples @ "
+          f"{sc.metrics_interval_s*1e3:.0f}ms):")
+    print(f"  {'t':>7s} {'load':>7s} {'queue':>6s} {'in_flight':>9s} "
+          f"{'goodput':>12s}")
+    cell = sim.cells[0].name
+    for row in sim.sampler.rows:
+        print(f"  {row['t']:6.2f}s {row['cloud/load']:7.1%} "
+              f"{row[f'cell/{cell}/queue_depth']:6.0f} "
+              f"{row[f'cell/{cell}/in_flight']:9.0f} "
+              f"{row[f'wire/{wire_key}/up_goodput_bps']/1e3:9.1f} kB/s")
     s = tel.summary()
     print(f"  {s['n_requests']:.0f} requests, latency p50 "
           f"{s['latency_p50_ms']:.2f} ms, p99 {s['latency_p99_ms']:.2f} ms "

@@ -11,8 +11,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 from collections import defaultdict
+
+# Telemetry schema versions this aggregator understands.  Mirrors
+# repro.runtime.telemetry.SCHEMA_VERSION (duplicated on purpose: the CI
+# runtime-table job runs this script without PYTHONPATH=src, so it must not
+# import repro; tests/test_observability.py cross-checks the two stay in
+# sync).  None covers trajectory runs recorded before the field existed.
+KNOWN_SCHEMA_VERSIONS = (None, 2)
 
 ARCH_ORDER = ["qwen3-14b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
               "pixtral-12b", "whisper-base", "gemma-7b", "gemma3-12b",
@@ -71,6 +79,136 @@ def ingest_runtime(csv_path: str, out_path: str = RUNTIME_JSON) -> int:
     if results:
         append_runs(results, out_path)
     return len(results)
+
+
+# ---------------------------------------------------------------- ratchet
+# Metric direction is inferred from the leaf key name; keys matching
+# neither list (counts, split indices, workload echo) are not ratcheted.
+LOWER_IS_BETTER = ("latency", "ttft", "_ms", "_kb", "rtt")
+HIGHER_IS_BETTER = ("speedup", "throughput", "reduction", "goodput")
+RATCHET_THRESHOLD = 0.15
+
+
+def _finite(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def _direction(key: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 not a ratcheted metric."""
+    leaf = key.rsplit(".", 1)[-1].lower()
+    if any(tok in leaf for tok in HIGHER_IS_BETTER):
+        return 1
+    if any(tok in leaf for tok in LOWER_IS_BETTER):
+        return -1
+    return 0
+
+
+def _flatten(doc, prefix=""):
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif _finite(doc):
+        out[prefix[:-1]] = float(doc)
+    return out
+
+
+def check_regression(fresh, baseline_runs, threshold: float = RATCHET_THRESHOLD):
+    """Ratchet a fresh runtime-benchmark run against the trajectory.
+
+    For every direction-inferred metric present in both ``fresh`` and at
+    least one baseline run, the baseline is the *best* value over the whole
+    trajectory (min for lower-is-better, max for higher-is-better) — the
+    ratchet only ever tightens.  A metric violates when it is more than
+    ``threshold`` (relative) worse than that best.  Baseline runs that are
+    content-equal to ``fresh`` (ignoring the ``run`` counter) are excluded,
+    because ``benchmarks.run runtime`` appends the fresh run to
+    BENCH_runtime.json in place before the check executes.
+
+    Returns ``{"checked", "baseline_runs", "violations": [...]}`` where each
+    violation is ``{"key", "fresh", "best", "best_run", "drift"}``.
+    """
+    fresh_body = {k: v for k, v in fresh.items() if k != "run"}
+    baselines = [r for r in baseline_runs
+                 if {k: v for k, v in r.items() if k != "run"} != fresh_body]
+    flat_baselines = [(r.get("run"), _flatten(r)) for r in baselines]
+    violations, checked = [], 0
+    for key, value in sorted(_flatten(fresh).items()):
+        d = _direction(key)
+        if d == 0:
+            continue
+        best, best_run = None, None
+        for run_id, flat in flat_baselines:
+            v = flat.get(key)
+            if v is None or not math.isfinite(v) or v <= 0:
+                continue
+            if best is None or (v < best if d < 0 else v > best):
+                best, best_run = v, run_id
+        if best is None:
+            continue  # metric new to the trajectory: nothing to ratchet
+        checked += 1
+        drift = (value - best) / best if d < 0 else (best - value) / best
+        if drift > threshold:
+            violations.append({"key": key, "fresh": value, "best": best,
+                               "best_run": best_run,
+                               "drift": round(drift, 4)})
+    return {"checked": checked, "baseline_runs": len(baselines),
+            "violations": violations}
+
+
+def _load_fresh_run(spec: str, traj_path: str = RUNTIME_JSON):
+    """Resolve --check-regression's argument into (fresh_run, baselines).
+
+    ``spec`` may be: '' (compare the trajectory's last run against the
+    earlier ones), a ``benchmarks.run runtime`` CSV capture (rows prefixed
+    ``runtime/json,``), or a JSON file (a single run doc, or a
+    ``{"runs": [...]}`` trajectory whose last run is the candidate).
+    """
+    doc = json.load(open(traj_path)) if os.path.exists(traj_path) else {}
+    trajectory = doc.get("runs", [])
+    if not spec:
+        if len(trajectory) < 2:
+            raise SystemExit(f"{traj_path} needs >=2 runs to ratchet the "
+                             f"last against the rest")
+        return trajectory[-1], trajectory[:-1]
+    if not os.path.exists(spec):
+        raise SystemExit(f"--check-regression: {spec} not found")
+    text = open(spec).read()
+    csv_rows = [json.loads(line.split(",", 2)[2])
+                for line in text.splitlines()
+                if line.startswith("runtime/json,")]
+    if csv_rows:
+        return csv_rows[-1], trajectory
+    loaded = json.loads(text)
+    if isinstance(loaded.get("runs"), list) and loaded["runs"]:
+        return loaded["runs"][-1], trajectory or loaded["runs"][:-1]
+    return loaded, trajectory
+
+
+def run_check(spec: str, threshold: float = RATCHET_THRESHOLD) -> None:
+    fresh, baselines = _load_fresh_run(spec)
+    sv = fresh.get("schema_version")
+    if sv not in KNOWN_SCHEMA_VERSIONS:
+        raise SystemExit(f"unknown telemetry schema_version {sv!r} "
+                         f"(known: {KNOWN_SCHEMA_VERSIONS}); teach "
+                         f"experiments/aggregate.py about it first")
+    if not baselines:
+        raise SystemExit("no baseline runs in BENCH_runtime.json to "
+                         "ratchet against")
+    report = check_regression(fresh, baselines, threshold)
+    print(f"perf ratchet: {report['checked']} metrics vs best of "
+          f"{report['baseline_runs']} baseline run(s), "
+          f"threshold {threshold:.0%}")
+    if report["violations"]:
+        for v in report["violations"]:
+            print(f"  REGRESSION {v['key']}: {v['fresh']:.4g} vs best "
+                  f"{v['best']:.4g} (run {v['best_run']}), "
+                  f"{v['drift']:+.1%} worse")
+        raise SystemExit(f"{len(report['violations'])} metric(s) drifted "
+                         f">{threshold:.0%} past the trajectory best")
+    print("  OK — no metric worse than trajectory best by "
+          f">{threshold:.0%}")
 
 
 def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
@@ -153,13 +291,17 @@ def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
               f"{topo['isolated_vs_shared_p50_speedup']}x slower than "
               f"per-cell radios")
     if len(runs) > 1:
-        print("\n#### Perf trajectory (split int8 p50 on 3g, per run)\n")
+        print("\n#### Perf trajectory (split int8 on 3g, per run)\n")
         for r in runs:
-            p50 = r.get("networks", {}).get("3g", {}) \
-                   .get("split_int8", {}).get("latency_p50_ms")
-            spd = r.get("networks", {}).get("3g", {}) \
-                   .get("split_speedup_vs_cloud")
-            print(f"run {r.get('run', '?')}: {p50}ms ({spd}x vs cloud-only)")
+            row = r.get("networks", {}).get("3g", {})
+            p50 = row.get("split_int8", {}).get("latency_p50_ms")
+            spd = row.get("split_speedup_vs_cloud")
+            thr = row.get("split_int8", {}).get("throughput_rps")
+            # throughput is NaN for single-arrival spans — render as absent
+            # rather than poisoning the table
+            thr_note = f", {thr:.1f} req/s" if _finite(thr) else ""
+            print(f"run {r.get('run', '?')}: {p50}ms "
+                  f"({spd}x vs cloud-only{thr_note})")
 
 
 def main():
@@ -173,10 +315,23 @@ def main():
                          "BENCH_runtime.json, failing if it cannot render "
                          "(the CI artifact step: catches schema drift from "
                          "new telemetry fields)")
+    ap.add_argument("--check-regression", nargs="?", const="",
+                    metavar="CSV|JSON",
+                    help="perf ratchet: compare a fresh benchmarks.run "
+                         "runtime result (CSV capture with runtime/json "
+                         "rows, or a JSON run doc/trajectory; no argument = "
+                         "last checked-in run) against the best of the "
+                         "BENCH_runtime.json trajectory; exit 1 on any "
+                         "metric >threshold worse")
+    ap.add_argument("--threshold", type=float, default=RATCHET_THRESHOLD,
+                    help="relative drift tolerance for --check-regression")
     args = ap.parse_args()
     if args.ingest_runtime:
         n = ingest_runtime(args.ingest_runtime)
         print(f"ingested {n} runtime run(s) into {RUNTIME_JSON}")
+    if args.check_regression is not None:
+        run_check(args.check_regression, args.threshold)
+        return
     if args.runtime_only:
         print_runtime(require=True)
         return

@@ -139,6 +139,21 @@ def main():
                          "building Poisson arrivals (byte-for-byte "
                          "reproducible; overrides --requests/--rate)")
     ap.add_argument("--json", default=None, help="write full trace JSON here")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="write a Chrome trace-event file of the run "
+                         "(virtual-clock spans; load in Perfetto / "
+                         "chrome://tracing; validate with "
+                         "'python -m repro.runtime.tracing <file>')")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="write the fixed-interval metrics timeline (queue "
+                         "depths, wire occupancy/goodput, cloud batch, "
+                         "per-cell in-flight) as JSONL")
+    ap.add_argument("--metrics-interval", type=float, default=0.01,
+                    help="sampler period in virtual seconds")
+    ap.add_argument("--profile-jit", action="store_true",
+                    help="wall-clock compile-vs-execute attribution per jit "
+                         "cache entry (numerics mode; host-dependent, so "
+                         "excluded from virtual-clock artifacts)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -173,7 +188,10 @@ def main():
         adapt=args.adapt, control_interval_s=args.control_interval,
         objective=args.objective, slo_ms=args.slo_ms,
         max_concurrent=args.max_concurrent, seed=args.seed,
-        numerics=not args.no_numerics, arrivals=arrivals)
+        numerics=not args.no_numerics, arrivals=arrivals,
+        trace=bool(args.trace_out), metrics=bool(args.metrics_out),
+        metrics_interval_s=args.metrics_interval,
+        profile_jit=args.profile_jit)
 
     sim = Simulation(sim_cfg)
     if args.record_trace:
@@ -232,10 +250,31 @@ def main():
             mark = " <-- moved" if d.new_split != d.old_split else ""
             print(f"  {d.t:7.3f}s  [{d.cell}]  load={d.cloud_load:5.1%}  "
                   f"split={d.new_split}  {d.transport}{mark}")
+    if args.profile_jit and tel.jit_profile:
+        h = tel.jit_profile["headline"]
+        print(f"\njit profile: {h['entries']} cache entries, "
+              f"{h['calls']} dispatches, compile "
+              f"{h['compile_wall_ms']:.1f} ms / steady "
+              f"{h['steady_wall_ms']:.1f} ms "
+              f"(compile fraction {h['compile_fraction']:.1%})")
+        for key, row in sorted(tel.jit_profile["entries"].items()):
+            print(f"  {key:<28} first {row['first_call_ms']:8.1f} ms  "
+                  f"steady x{row['steady_calls']:<3.0f} "
+                  f"mean {row['steady_mean_ms']:7.2f} ms")
     if args.json:
         with open(args.json, "w") as f:
             f.write(tel.to_json())
         print(f"\nwrote {args.json}")
+    if args.trace_out:
+        sim.tracer.write(args.trace_out)
+        print(f"wrote {args.trace_out} "
+              f"({len(sim.tracer.events)} trace events; validate with "
+              f"'python -m repro.runtime.tracing {args.trace_out}')")
+    if args.metrics_out:
+        sim.sampler.write(args.metrics_out)
+        print(f"wrote {args.metrics_out} "
+              f"({len(sim.sampler.rows)} samples x "
+              f"{len(sim.sampler.sources)} sources)")
 
 
 if __name__ == "__main__":

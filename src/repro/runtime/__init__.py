@@ -8,6 +8,9 @@ static pieces:
   clock.py       deterministic discrete-event loop (reproducible traces)
   wire.py        contended uplink + downlink, windowed goodput feedback
   telemetry.py   per-request breakdown, p50/p95/p99, per-cell fairness
+  tracing.py     flight recorder: virtual-clock spans -> Chrome trace JSON
+  metrics.py     counters/gauges/histograms, fixed-interval sampler, and
+                 opt-in wall-clock jit profiling
   split_exec.py  real jax numerics for the edge/cloud halves + cost model
   transports.py  pluggable decode transports (cache handoff vs streamed rows)
   actors.py      edge-device fleets and the cloud continuous-batching server
@@ -21,15 +24,21 @@ Entry points: ``repro.launch.runtime_sim`` (CLI) and
 """
 from repro.runtime.clock import EventLoop
 from repro.runtime.controller import AdaptiveSplitController
+from repro.runtime.metrics import (CountersView, JitProfiler, MetricsRegistry,
+                                   MetricsSampler, read_metrics_jsonl)
 from repro.runtime.simulator import (Arrival, CellSpec, SimConfig, Simulation,
                                      Topology, parse_topology,
                                      poisson_arrivals, record_arrivals,
                                      trace_arrivals)
 from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.tracing import (NULL_TRACER, Tracer, validate_chrome_trace)
 from repro.runtime.transports import DecodeTransport, get_transport
 from repro.runtime.wire import Wire
 
 __all__ = ["EventLoop", "AdaptiveSplitController", "Arrival", "CellSpec",
            "SimConfig", "Simulation", "Topology", "RequestTrace", "Telemetry",
            "Wire", "DecodeTransport", "get_transport", "parse_topology",
-           "poisson_arrivals", "record_arrivals", "trace_arrivals"]
+           "poisson_arrivals", "record_arrivals", "trace_arrivals",
+           "Tracer", "NULL_TRACER", "validate_chrome_trace",
+           "MetricsRegistry", "MetricsSampler", "CountersView", "JitProfiler",
+           "read_metrics_jsonl"]

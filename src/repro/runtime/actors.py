@@ -37,6 +37,7 @@ from repro.core.costs import TOKEN_BYTES
 from repro.runtime.clock import EventLoop
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.tracing import NULL_TRACER
 from repro.runtime.transports import get_transport
 from repro.runtime.wire import Wire
 
@@ -89,11 +90,25 @@ class EdgeDevice:
         self.free_at = 0.0
         self._local_engine = None
         self._numerics_pending: List[SimRequest] = []
+        # flight recorder (simulator swaps in a live tracer when tracing);
+        # dev_id is fleet-global, so the track is unique per device
+        self.tracer = NULL_TRACER
+        self.track = f"edge/{cell}/dev{dev_id}"
+        # (t_edge_start, t_edge_done) of recent arrivals — the sampler's
+        # queue-depth source (how many requests are waiting or computing)
+        self._recent_starts: deque = deque()
 
     def runner(self, split: int):
         """This cell's view of the bank: the edge half runs at the cell's
         model-axis degree (the cloud degree is fleet-global)."""
         return self.bank.runner(split, edge_mp=self.edge_mp)
+
+    def queue_depth(self, now: float) -> int:
+        """Arrivals whose edge compute has not started by ``now`` — the
+        device-queue gauge the metrics sampler snapshots."""
+        while self._recent_starts and self._recent_starts[0][1] <= now:
+            self._recent_starts.popleft()
+        return sum(1 for s, _ in self._recent_starts if s > now)
 
     def on_arrival(self, req: SimRequest) -> None:
         t = req.trace
@@ -113,6 +128,14 @@ class EdgeDevice:
         t.t_edge_start = start
         t.t_edge_done = start + dur
         self.free_at = t.t_edge_done
+        self._recent_starts.append((start, t.t_edge_done))
+        if self.tracer.enabled:
+            self.tracer.async_span(f"req/{self.cell}", "edge_queue", t.uid,
+                                   t.t_arrival, start)
+            if dur > 0:
+                name = "prefill" if self.mode == "split" else "local_infer"
+                self.tracer.complete(self.track, name, start, start + dur,
+                                     cat="edge", args={"uid": t.uid, "S": S})
         self.loop.schedule_at(t.t_edge_done, lambda: self._edge_done(req))
 
     def _edge_done(self, req: SimRequest) -> None:
@@ -128,9 +151,13 @@ class EdgeDevice:
         transport.after_edge_prefill(self, req)
         nbytes = transport.prefill_uplink_bytes(self, req)
         t.wire_bytes = nbytes
-        start, done = self.uplink.transfer(nbytes, self.loop.now)
+        start, done = self.uplink.transfer(nbytes, self.loop.now, uid=t.uid,
+                                           tag="prefill")
         t.t_uplink_start, t.t_uplink_done = start, done
         t.mobile_energy_mj += self.uplink.transfer_energy_mj(nbytes)
+        if self.tracer.enabled:
+            self.tracer.async_span(f"req/{self.cell}", "uplink_wait", t.uid,
+                                   t.t_edge_done, start)
         self.loop.schedule_at(done, lambda: self.server.on_payload(req))
 
     def _compute_edge_batch(self, req: SimRequest) -> None:
@@ -158,6 +185,9 @@ class EdgeDevice:
             self._numerics_pending.remove(r)
         self.telemetry.counters["edge_numerics_batches"] += 1
         self.telemetry.counters["edge_numerics_requests"] += len(group)
+        self.tracer.instant(self.track, "coalesce", self.loop.now,
+                            args={"group": len(group),
+                                  "split": req.trace.split})
 
     def _finish_local(self, req: SimRequest) -> None:
         """Mobile-only baseline: everything already ran on the device."""
@@ -220,6 +250,7 @@ class CloudServer:
         self._busy = False
         self._prefill_busy_until = 0.0            # serial accelerator frontier
         self.peak_active = 0
+        self.tracer = NULL_TRACER                 # swapped in by the simulator
 
     # -- load signal --------------------------------------------------------
     @property
@@ -324,6 +355,13 @@ class CloudServer:
         self.slots[slot] = req
         self.slot_history.append((t.uid, slot))
         self.peak_active = max(self.peak_active, self.num_active)
+        if self.tracer.enabled:
+            self.tracer.async_span(f"req/{t.cell}", "cloud_queue", t.uid,
+                                   t.t_uplink_done, start)
+            self.tracer.complete("cloud/accel", "prefill", start, start + dur,
+                                 cat="cloud", args={"uid": t.uid,
+                                                    "split": t.split,
+                                                    "slot": slot})
         self.loop.schedule_at(start + dur, lambda: self._prefill_done(req))
         return start + dur
 
@@ -373,6 +411,8 @@ class CloudServer:
             dur += self.cost.cloud_decode_step_s(split, self.d_r, k, load)
         self.telemetry.counters["stream_cloud_turns"] += 1
         self.telemetry.counters["stream_rows"] += len(batch)
+        self.tracer.complete("cloud/accel", "stream_turn", now, now + dur,
+                             cat="cloud", args={"rows": len(batch)})
         self.loop.schedule(dur, lambda: self._stream_turn_done(batch))
 
     def _stream_turn_done(self, batch: List[SimRequest]) -> None:
@@ -383,6 +423,8 @@ class CloudServer:
         batch = self.num_decoding
         load = min(max(self.background_load(now), 0.0), 0.99)
         dur = self.cost.decode_step_s(batch, where="cloud", load=load)
+        self.tracer.complete("cloud/accel", "decode_turn", now, now + dur,
+                             cat="cloud", args={"batch": batch})
         self.loop.schedule(dur, self._decode_done)
 
     def _decode_done(self) -> None:
@@ -416,17 +458,30 @@ class CloudServer:
         else:
             t.new_tokens = req.max_new_tokens
         if req.slot >= 0:
-            self.slots[req.slot] = None
-            req.slot = -1
+            self.release_slot(req, self.loop.now)
         wire = self.wire_for(req)
         if wire is None:                    # no modeled downlink: instant
             self._deliver(req)
             return
         nbytes = TOKEN_BYTES * t.new_tokens
         t.downlink_bytes += nbytes
-        start, done = wire.transfer_down(nbytes, self.loop.now)
+        start, done = wire.transfer_down(nbytes, self.loop.now, uid=t.uid,
+                                         tag="ids")
         t.mobile_energy_mj += wire.downlink_energy_mj(nbytes)
         self.loop.schedule_at(done, lambda: self._deliver(req))
+
+    def release_slot(self, req: SimRequest, now: float) -> None:
+        """Free ``req``'s engine slot, closing its residency span (admission
+        prefill start -> release) on the slot's trace track."""
+        slot = req.slot
+        self.slots[slot] = None
+        req.slot = -1
+        if self.tracer.enabled:
+            t = req.trace
+            self.tracer.complete(f"cloud/slot{slot}", f"u{t.uid}",
+                                 t.t_cloud_start, now, cat="slot",
+                                 args={"uid": t.uid, "split": t.split,
+                                       "transport": t.transport})
 
     def _deliver(self, req: SimRequest) -> None:
         t = req.trace

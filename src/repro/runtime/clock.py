@@ -31,6 +31,25 @@ class EventLoop:
             raise ValueError(f"negative delay {delay}")
         self.schedule_at(self.now + delay, fn)
 
+    def schedule_every(self, interval: float, fn: Callable[[], None],
+                       first_delay: Optional[float] = None) -> Callable[[], None]:
+        """Fire ``fn`` every ``interval`` of virtual time until the returned
+        cancel callable is invoked.  The periodic event re-arms itself, so a
+        caller (e.g. the metrics sampler) MUST cancel it when the workload
+        drains — otherwise :meth:`run` never sees an empty queue."""
+        if interval <= 0:
+            raise ValueError(f"non-positive interval {interval}")
+        live = [True]
+
+        def tick() -> None:
+            if not live[0]:
+                return
+            fn()
+            self.schedule(interval, tick)
+
+        self.schedule(interval if first_delay is None else first_delay, tick)
+        return lambda: live.__setitem__(0, False)
+
     def empty(self) -> bool:
         return not self._heap
 

@@ -29,6 +29,7 @@ from repro.core.planner import select_split_online
 from repro.core.profiler import HardwareProfile
 from repro.runtime.clock import EventLoop
 from repro.runtime.telemetry import ControlDecision, Telemetry
+from repro.runtime.tracing import NULL_TRACER
 from repro.runtime.wire import Wire
 
 
@@ -50,7 +51,7 @@ class AdaptiveSplitController:
                  set_transport: Optional[Callable[[str], None]] = None,
                  get_transport: Optional[Callable[[], str]] = None,
                  edge_mp: int = 1, cloud_mp: int = 1,
-                 cell: str = "cell0"):
+                 cell: str = "cell0", tracer=NULL_TRACER):
         assert transport_mode in ("cache_handoff", "streamed", "auto"), \
             transport_mode
         self.handoff_bytes_per_layer = handoff_bytes_per_layer
@@ -79,6 +80,7 @@ class AdaptiveSplitController:
         self.new_tokens = new_tokens
         self.set_transport = set_transport
         self.get_transport = get_transport or (lambda: "cache_handoff")
+        self.tracer = tracer
         self.running = False
 
     def start(self) -> None:
@@ -111,6 +113,10 @@ class AdaptiveSplitController:
             t=now, cloud_load=load, link_bytes_per_s=link_bps,
             old_split=old, new_split=best["split"],
             transport=best["transport"], cell=self.cell))
+        self.tracer.instant(
+            f"ctl/{self.cell}", "decision", now, cat="control",
+            args={"split": best["split"], "transport": best["transport"],
+                  "cloud_load": load, "link_bytes_per_s": link_bps})
         if best["split"] != old:
             self.set_split(best["split"])
         if self.set_transport is not None and \

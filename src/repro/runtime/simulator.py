@@ -47,8 +47,10 @@ from repro.core.profiler import (GTX_1080TI, JETSON_TX2, HardwareProfile,
                                  get_device_class)
 from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
 from repro.runtime.clock import EventLoop
+from repro.runtime.metrics import JitProfiler, MetricsRegistry, MetricsSampler
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
+from repro.runtime.tracing import NULL_TRACER, Tracer
 from repro.runtime.wire import Wire
 
 
@@ -280,6 +282,12 @@ class SimConfig:
     seed: int = 0
     numerics: bool = True
     arrivals: Optional[Sequence[Arrival]] = None   # overrides Poisson build
+    # flight recorder (all opt-in; the default path is byte-identical to a
+    # build without any of it)
+    trace: bool = False                      # virtual-clock span tracing
+    metrics: bool = False                    # fixed-interval metrics sampler
+    metrics_interval_s: float = 0.01
+    profile_jit: bool = False                # wall-clock jit attribution
 
 
 class Simulation:
@@ -297,7 +305,9 @@ class Simulation:
         self.sim_cfg = c
         self.base_cfg = base
         self.loop = EventLoop()
-        self.telemetry = Telemetry()
+        self.tracer = Tracer() if c.trace else NULL_TRACER
+        self.registry = MetricsRegistry()
+        self.telemetry = Telemetry(self.registry)
         self.candidates = list(c.candidate_splits) if c.candidate_splits \
             else list(range(1, base.num_layers))
 
@@ -316,6 +326,10 @@ class Simulation:
             if key not in wires:
                 wires[key] = Wire.named(spec.network,
                                         duplex=spec.duplex or c.duplex)
+                wires[key].tracer = self.tracer
+                # group key, not network name: two cells on the same network
+                # still get distinct trace tracks
+                wires[key].track_prefix = f"wire/{key}"
             else:
                 assert wires[key].name == spec.network, \
                     f"wire group {key!r} spans networks " \
@@ -334,9 +348,14 @@ class Simulation:
                 "cache_handoff" if tp_mode == "auto" else tp_mode))
             edge_mps.add(spec.edge_mp)
 
+        self.wires = wires
+        self.profiler = JitProfiler() if (c.profile_jit and c.numerics) \
+            else None
         self.bank = SplitModelBank(base, c.d_r, wire_mode=c.wire_mode,
                                    seed=c.seed, edge_mp=min(edge_mps),
-                                   cloud_mp=c.cloud_mp) if c.numerics else None
+                                   cloud_mp=c.cloud_mp,
+                                   profiler=self.profiler) \
+            if c.numerics else None
         # cloud-side cost model (the server only charges cloud durations;
         # cell 0's is exact for the 1-cell configuration)
         self.cost = self.cells[0].cost
@@ -350,6 +369,7 @@ class Simulation:
             max_len=c.prompt_len + c.max_new_tokens + 2,
             on_done=self._on_done, numerics_split=self.cells[0].current_split,
             wire=self.cells[0].wire)
+        self.server.tracer = self.tracer
         self.devices: List[EdgeDevice] = []
         for cell in self.cells:
             cell.dev_base = len(self.devices)
@@ -361,6 +381,7 @@ class Simulation:
                     telemetry=self.telemetry,
                     numerics_split=cell.current_split,
                     cell=cell.name, cell_index=cell.index))
+                self.devices[-1].tracer = self.tracer
         self.server.devices = self.devices       # downlink delivery targets
         self.controllers: List[object] = []
         if c.adapt and c.mode == "split":
@@ -389,8 +410,11 @@ class Simulation:
                     set_transport=cell.set_transport,
                     get_transport=lambda cell=cell: cell.current_transport,
                     edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp,
-                    cell=cell.name)
+                    cell=cell.name, tracer=self.tracer)
                 self.controllers.append(cell.controller)
+        self._register_tracks()
+        self._in_flight = {cell.name: 0 for cell in self.cells}
+        self.sampler = self._build_sampler() if c.metrics else None
         self.arrivals: List[Arrival] = (
             list(c.arrivals) if c.arrivals is not None
             else self._build_arrivals())
@@ -428,6 +452,8 @@ class Simulation:
         self._schedule_arrivals()
         for ctl in self.controllers:
             ctl.start()
+        if self.sampler is not None:
+            self.sampler.start()
         self.loop.run()
         assert self._remaining == 0, \
             f"{self._remaining} requests never completed"
@@ -438,9 +464,68 @@ class Simulation:
                 d._local_engine.decode_steps for d in self.devices
                 if d._local_engine is not None)
             c["bank_jit_cache_entries"] = self.bank.jit_cache_entries
+            c["bank_jit_cache_hits"] = self.bank.cache_hits
+            c["bank_jit_cache_misses"] = self.bank.cache_misses
+        if self.profiler is not None:
+            self.telemetry.jit_profile = {
+                "headline": self.profiler.headline(),
+                "entries": self.profiler.summary()}
         return self.telemetry
 
     # ------------------------------------------------------------- internals
+    def _register_tracks(self) -> None:
+        """Pre-register every trace track in topology order so the exported
+        file lists them deterministically (and readably) even for tracks
+        that end up empty."""
+        if not self.tracer.enabled:
+            return
+        for d in self.devices:
+            self.tracer.track(d.track)
+        for key, w in self.wires.items():
+            self.tracer.track(f"{w.track_prefix}/up")
+            self.tracer.track(f"{w.track_prefix}/down")
+        self.tracer.track("cloud/accel")
+        for i in range(self.sim_cfg.max_concurrent):
+            self.tracer.track(f"cloud/slot{i}")
+        for cell in self.cells:
+            if cell.controller is not None:
+                self.tracer.track(f"ctl/{cell.name}")
+            self.tracer.track(f"req/{cell.name}")
+
+    def _build_sampler(self) -> MetricsSampler:
+        """Wire the fixed-interval sampler to read-only views of runtime
+        state: queue depths, per-direction wire occupancy + windowed
+        goodput, cloud batch size/occupancy, per-cell in-flight counts."""
+        sampler = MetricsSampler(self.loop, self.registry,
+                                 interval_s=self.sim_cfg.metrics_interval_s)
+        srv = self.server
+        sampler.add_source("cloud/load", srv.current_load)
+        sampler.add_source("cloud/active",
+                           lambda now: float(srv.num_active))
+        sampler.add_source("cloud/decoding",
+                           lambda now: float(srv.num_decoding))
+        sampler.add_source("cloud/pending",
+                           lambda now: float(len(srv.pending)))
+        for key, w in self.wires.items():
+            sampler.add_source(f"wire/{key}/up_backlog_s", w.up_backlog_s)
+            sampler.add_source(f"wire/{key}/down_backlog_s",
+                               w.down_backlog_s)
+            sampler.add_source(f"wire/{key}/up_goodput_bps",
+                               w.observed_bytes_per_s)
+            sampler.add_source(f"wire/{key}/down_goodput_bps",
+                               w.observed_down_bytes_per_s)
+        for cell in self.cells:
+            devs = self.devices[cell.dev_base:
+                                cell.dev_base + cell.spec.num_devices]
+            sampler.add_source(
+                f"cell/{cell.name}/queue_depth",
+                lambda now, devs=devs: float(sum(d.queue_depth(now)
+                                                 for d in devs)))
+            sampler.add_source(
+                f"cell/{cell.name}/in_flight",
+                lambda now, name=cell.name: float(self._in_flight[name]))
+        return sampler
+
     def _build_arrivals(self) -> List[Arrival]:
         """Per-cell Poisson streams: explicit CellSpec.num_requests is
         honored, the rest of the fleet-wide total splits evenly (remainder
@@ -482,9 +567,18 @@ class Simulation:
 
     def _on_done(self, req: SimRequest) -> None:
         self._remaining -= 1
+        t = req.trace
+        self._in_flight[t.cell] -= 1
+        if self.tracer.enabled:
+            self.tracer.async_span(
+                f"req/{t.cell}", "request", t.uid, t.t_arrival, t.t_done,
+                args={"uid": t.uid, "device": t.device, "split": t.split,
+                      "transport": t.transport})
         if self._remaining == 0:
             for ctl in self.controllers:
                 ctl.stop()
+            if self.sampler is not None:
+                self.sampler.stop()
 
     def _schedule_arrivals(self) -> None:
         c = self.sim_cfg
@@ -507,6 +601,7 @@ class Simulation:
             # request — the owning cell's latest controller decision governs
             # new arrivals only
             cell = self.cell_of(dev)
+            self._in_flight[cell.name] += 1
             if self.sim_cfg.mode == "split":
                 req.trace.split = cell.current_split
                 req.trace.transport = cell.current_transport

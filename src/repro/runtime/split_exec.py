@@ -181,7 +181,7 @@ class SplitModelBank:
 
     def __init__(self, base_cfg, d_r: int, *, wire_bits: int = 8,
                  wire_mode: str = "int8", seed: int = 0,
-                 edge_mp: int = 1, cloud_mp: int = 1):
+                 edge_mp: int = 1, cloud_mp: int = 1, profiler=None):
         import jax
         import jax.numpy as jnp
 
@@ -232,6 +232,11 @@ class SplitModelBank:
         self._fns: Dict[Tuple[str, int, int], object] = {}  # compile cache
         self._cache_templates: Dict[Tuple[int, int, int, int], object] = {}
         self.jit_cache_keys: set = set()  # (kind, split, mp, B_bkt, S_bkt)
+        # opt-in wall-clock attribution (metrics.JitProfiler) + hit/miss
+        # bookkeeping per padded-shape cache entry
+        self.profiler = profiler
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # ------------------------------------------------------------------ api
     @property
@@ -241,6 +246,24 @@ class SplitModelBank:
     @property
     def jit_cache_entries(self) -> int:
         return len(self.jit_cache_keys)
+
+    def timed_call(self, key: Tuple, fn, *args):
+        """Run one hot-path dispatch, recording its compile-cache key (hit
+        or miss per padded-shape entry) and — when a profiler is attached —
+        its wall-clock first-call/steady attribution."""
+        self.note_key(key)
+        if self.profiler is None:
+            return fn(*args)
+        return self.profiler.timed(key, fn, *args)
+
+    def note_key(self, key: Tuple) -> None:
+        """Hit/miss bookkeeping only — for dispatches whose jitted call runs
+        elsewhere (the engine's fused sampling steps)."""
+        if key in self.jit_cache_keys:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            self.jit_cache_keys.add(key)
 
     @property
     def batch_numerics_ok(self) -> bool:
@@ -651,9 +674,10 @@ class SplitRunner:
         toks = jnp.asarray(toks)
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
-        out = bank._fn("edge", self.split, self.edge_mp)(
+        out = bank.timed_call(
+            ("edge", self.split, self.edge_mp, Bb, Sb),
+            bank._fn("edge", self.split, self.edge_mp),
             params, bank._pad_toks(toks, Bb, Sb))
-        bank.jit_cache_keys.add(("edge", self.split, self.edge_mp, Bb, Sb))
         payload, scales, cache0 = out
         return (payload[:B, :S], scales[:B, :S],
                 bank._slice_cache(cache0, 0, self.split, B, S))
@@ -670,9 +694,10 @@ class SplitRunner:
             pad = ((0, Bb - B), (0, Sb - S), (0, 0))
             payload = jnp.pad(payload, pad)
             scales = jnp.pad(jnp.asarray(scales), pad)
-        logits, cache1 = bank._fn("cloud", self.split, self.cloud_mp)(
+        logits, cache1 = bank.timed_call(
+            ("cloud", self.split, self.cloud_mp, Bb, Sb),
+            bank._fn("cloud", self.split, self.cloud_mp),
             params, payload, scales, jnp.int32(S))
-        bank.jit_cache_keys.add(("cloud", self.split, self.cloud_mp, Bb, Sb))
         return logits[:B], bank._slice_cache(cache1, 1, self.split, B, S)
 
     # --------------------------------------------------------- streamed decode
@@ -685,10 +710,10 @@ class SplitRunner:
         import jax.numpy as jnp
         bank = self.bank
         tok = jnp.asarray(tok, jnp.int32)
-        out = bank._fn("edge_step", self.split, self.edge_mp)(
+        out = bank.timed_call(
+            ("edge_step", self.split, self.edge_mp, tok.shape[0], 1),
+            bank._fn("edge_step", self.split, self.edge_mp),
             params, tok, cache0, jnp.asarray(pos, jnp.int32))
-        bank.jit_cache_keys.add(("edge_step", self.split, self.edge_mp,
-                                 tok.shape[0], 1))
         return out
 
     def stream_step(self, engine, req, cache, payload, scales, pos: int):
@@ -696,8 +721,7 @@ class SplitRunner:
         entry, with the bank's compile-cache bookkeeping (mirrors
         :meth:`edge_step`).  Returns ``(token, new_cache)``."""
         out = engine.stream_step(req, cache, payload, scales, pos)
-        self.bank.jit_cache_keys.add(("cloud_step", self.split, self.cloud_mp,
-                                      1, 1))
+        self.bank.note_key(("cloud_step", self.split, self.cloud_mp, 1, 1))
         return out
 
     def pad_decode_cache(self, cache, stage: int, length: int):
@@ -725,9 +749,10 @@ class SplitRunner:
         toks = jnp.asarray(toks)
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
-        logits, caches = bank._fn("prefill", self.split, mp)(
+        logits, caches = bank.timed_call(
+            ("prefill", self.split, mp, Bb, Sb),
+            bank._fn("prefill", self.split, mp),
             params, bank._pad_toks(toks, Bb, Sb), jnp.int32(S))
-        bank.jit_cache_keys.add(("prefill", self.split, mp, Bb, Sb))
         return logits[:B], [bank._slice_cache(caches[0], 0, self.split, B, S),
                             bank._slice_cache(caches[1], 1, self.split, B, S)]
 
@@ -748,7 +773,9 @@ class SplitRunner:
                              prefill_fn=partial(self._engine_prefill, mp=mp),
                              decode_fn=self.bank._fn("decode", self.split, mp),
                              stream_fn=self.bank._fn("cloud_step", self.split,
-                                                     mp))
+                                                     mp),
+                             profiler=self.bank.profiler,
+                             profile_key=(self.split, mp))
 
     # --------------------------------------------------------------- reference
     def reference_prefill(self, toks):

@@ -13,6 +13,15 @@ import math
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
+from repro.runtime.metrics import MetricsRegistry
+
+# version of the ``to_json()`` document layout.  Bumped when keys move or
+# change meaning so downstream consumers (the CI runtime-table job, the
+# aggregate.py perf ratchet) can reject drift explicitly instead of
+# misreading a stale schema.  v2 = adds schema_version itself + the
+# registry-backed counters + optional jit_profile section.
+SCHEMA_VERSION = 2
+
 
 @dataclass
 class RequestTrace:
@@ -123,13 +132,19 @@ class ControlDecision:
 
 
 class Telemetry:
-    def __init__(self):
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
         self.traces: List[RequestTrace] = []
         self.decisions: List[ControlDecision] = []
         # free-form runtime counters (numerics batch sizes, decode steps,
-        # compile-cache entries ...) — populated by the actors/simulator
-        from collections import defaultdict
-        self.counters: Dict[str, float] = defaultdict(float)
+        # compile-cache entries ...) — populated by the actors/simulator.
+        # Backed by the metrics registry so the same numbers are scrapeable
+        # next to gauges/histograms; the view keeps the defaultdict(float)
+        # semantics every call site relies on.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.counters = self.registry.counters
+        # wall-clock jit attribution (JitProfiler.summary()+headline());
+        # opt-in and host-dependent, so only set when SimConfig.profile_jit
+        self.jit_profile: Optional[Dict[str, object]] = None
 
     def record(self, trace: RequestTrace) -> None:
         self.traces.append(trace)
@@ -166,7 +181,12 @@ class Telemetry:
                 t.mobile_energy_mj for t in self.traces) / len(self.traces)
             span = max(t.t_done for t in self.traces) - \
                 min(t.t_arrival for t in self.traces)
-            out["throughput_rps"] = len(self.traces) / span if span > 0 else float("inf")
+            # span == 0 (single request, or all requests at one instant)
+            # has no defined rate — nan, not inf, so JSON consumers and
+            # the aggregate table render it as missing rather than blowing
+            # up comparisons
+            out["throughput_rps"] = len(self.traces) / span if span > 0 \
+                else float("nan")
         return out
 
     def split_trajectory(self) -> List[Dict[str, float]]:
@@ -250,7 +270,8 @@ class Telemetry:
         return "\n".join(rows)
 
     def to_json(self) -> str:
-        return json.dumps({
+        doc = {
+            "schema_version": SCHEMA_VERSION,
             "summary": self.summary(),
             "cells": self.cell_summary(),
             "fairness": self.fairness(),
@@ -259,4 +280,7 @@ class Telemetry:
             "traces": [dict(asdict(t), **{k: round(v, 9) for k, v in
                                           t.breakdown().items()})
                        for t in self.traces],
-        }, indent=2, sort_keys=True)
+        }
+        if self.jit_profile is not None:
+            doc["jit_profile"] = self.jit_profile
+        return json.dumps(doc, indent=2, sort_keys=True)

@@ -125,6 +125,9 @@ class StreamedTransport(DecodeTransport):
         dur = device.cost.edge_decode_step_s(t.split, device.d_r)
         device.free_at = start + dur
         t.mobile_energy_mj += device.cost.edge_energy_mj(dur)
+        device.tracer.complete(device.track, "decode_step", start,
+                               start + dur, cat="edge",
+                               args={"uid": t.uid, "pos": req.edge_pos})
         device.loop.schedule_at(start + dur,
                                 lambda: self.edge_step_done(device, req))
 
@@ -141,7 +144,8 @@ class StreamedTransport(DecodeTransport):
         nbytes = device.cost.stream_row_bytes(device.wire_mode, device.d_r)
         t.wire_bytes += nbytes
         req.stream_t0 = now                      # RTT: row ready -> id back
-        start, done = device.uplink.transfer(nbytes, now)
+        start, done = device.uplink.transfer(nbytes, now, uid=t.uid,
+                                             tag="row")
         t.mobile_energy_mj += device.uplink.transfer_energy_mj(nbytes)
         device.telemetry.counters["stream_edge_steps"] += 1
         device.loop.schedule_at(done,
@@ -195,13 +199,13 @@ class StreamedTransport(DecodeTransport):
         req.produced += 1
         wire = server.wire_for(req)
         t.downlink_bytes += TOKEN_BYTES
-        start, done = wire.transfer_down(TOKEN_BYTES, now)
+        start, done = wire.transfer_down(TOKEN_BYTES, now, uid=t.uid,
+                                         tag="token")
         t.mobile_energy_mj += wire.downlink_energy_mj(TOKEN_BYTES)
         if req.produced >= req.max_new_tokens:
             t.t_cloud_done = now
             if req.slot >= 0:
-                server.slots[req.slot] = None
-                req.slot = -1
+                server.release_slot(req, now)
             req.cloud_cache = None
         dev = server.devices[t.device]
         server.loop.schedule_at(

@@ -33,6 +33,7 @@ from dataclasses import dataclass
 from typing import Deque, Optional, Tuple
 
 from repro.core.wireless import get_link
+from repro.runtime.tracing import NULL_TRACER
 
 
 @dataclass
@@ -62,6 +63,11 @@ class Wire:
         # trailing-window samples per direction: (done, nbytes, occupied_s)
         self._recent_up: Deque[Tuple[float, float, float]] = deque()
         self._recent_down: Deque[Tuple[float, float, float]] = deque()
+        # flight recorder: the simulation swaps in a live tracer and a
+        # topology-unique track prefix (wires of different cells can share
+        # a link name)
+        self.tracer = NULL_TRACER
+        self.track_prefix = f"wire/{self.name}"
 
     @classmethod
     def named(cls, name: str, duplex: str = "split",
@@ -92,9 +98,13 @@ class Wire:
             self.downlink_seconds(down_bytes)
 
     # ------------------------------------------------------------- transfers
-    def transfer(self, nbytes: float, now: float) -> Tuple[float, float]:
+    def transfer(self, nbytes: float, now: float, *,
+                 uid: Optional[int] = None,
+                 tag: str = "xfer") -> Tuple[float, float]:
         """Enqueue ``nbytes`` on the uplink at virtual time ``now``; returns
-        ``(start, done)`` — ``start > now`` means the link was busy."""
+        ``(start, done)`` — ``start > now`` means the link was busy.  ``uid``
+        and ``tag`` only label the trace span (request id; ``prefill`` /
+        ``handoff`` / ``row`` ...)."""
         start = max(now, self.free_at)
         if self.duplex == "shared":
             start = max(start, self.down_free_at)
@@ -105,9 +115,13 @@ class Wire:
             self.down_free_at = done
         self._account(self.stats, self._recent_up, done, nbytes, dur,
                       start - now, self.transfer_energy_mj(nbytes))
+        self._span(f"{self.track_prefix}/up", tag, start, done, uid, nbytes,
+                   start - now)
         return start, done
 
-    def transfer_down(self, nbytes: float, now: float) -> Tuple[float, float]:
+    def transfer_down(self, nbytes: float, now: float, *,
+                      uid: Optional[int] = None,
+                      tag: str = "xfer") -> Tuple[float, float]:
         """Enqueue ``nbytes`` on the downlink at virtual time ``now``."""
         start = max(now, self.down_free_at)
         if self.duplex == "shared":
@@ -119,7 +133,18 @@ class Wire:
             self.free_at = done
         self._account(self.down_stats, self._recent_down, done, nbytes, dur,
                       start - now, self.downlink_energy_mj(nbytes))
+        self._span(f"{self.track_prefix}/down", tag, start, done, uid, nbytes,
+                   start - now)
         return start, done
+
+    def _span(self, track: str, tag: str, start: float, done: float,
+              uid: Optional[int], nbytes: float, wait: float) -> None:
+        if not self.tracer.enabled:
+            return
+        args = {"bytes": nbytes, "wait_ms": wait * 1e3}
+        if uid is not None:
+            args["uid"] = uid
+        self.tracer.complete(track, tag, start, done, cat="wire", args=args)
 
     @staticmethod
     def _account(s: LinkStats, recent: Deque[Tuple[float, float, float]],
@@ -131,6 +156,15 @@ class Wire:
         s.energy_mj += energy
         s.n_transfers += 1
         recent.append((done, nbytes, dur + wait))
+
+    # ------------------------------------------------------------- occupancy
+    def up_backlog_s(self, now: float) -> float:
+        """Seconds of queued uplink work ahead of a transfer enqueued *now*
+        (0 = idle link) — the metrics sampler's wire-occupancy gauge."""
+        return max(0.0, self.free_at - now)
+
+    def down_backlog_s(self, now: float) -> float:
+        return max(0.0, self.down_free_at - now)
 
     # ------------------------------------------------------------- goodput
     def nominal_bytes_per_s(self) -> float:

@@ -148,7 +148,8 @@ class ServingEngine:
                  seed: int = 0, stages=None,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
-                 stream_fn: Optional[Callable] = None):
+                 stream_fn: Optional[Callable] = None,
+                 profiler=None, profile_key: tuple = ()):
         self.params = params
         self.built = built
         self.cfg = built.cfg
@@ -177,6 +178,11 @@ class ServingEngine:
         self._temps = np.zeros((max_batch,), np.float32)
         self._uid = 0
         self.decode_steps = 0
+        # opt-in wall-clock attribution of the fused sampling steps
+        # (metrics.JitProfiler); profile_key distinguishes engines sharing
+        # the module-level step caches (e.g. the bank's (split, mp))
+        self._profiler = profiler
+        self._profile_key = tuple(profile_key)
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0,
@@ -244,7 +250,8 @@ class ServingEngine:
         shared compiled cloud step (one dispatch: restore + layers [split, N)
         + sampling) and return ``(token, new_cache)``."""
         assert self._stream_step is not None, "engine built without stream_fn"
-        toks, row, cache, self.key = self._stream_step(
+        toks, row, cache, self.key = self._dispatch(
+            "engine_stream_step", self._stream_step,
             self.params, jnp.asarray(payload), jnp.asarray(scales), cache,
             jnp.asarray([pos], jnp.int32), self.key,
             jnp.asarray([req.temperature], jnp.float32))
@@ -305,6 +312,12 @@ class ServingEngine:
             req.done = True
             self.active[slot] = None
 
+    def _dispatch(self, kind: str, fn, *args):
+        """Run a fused step, optionally through the wall-clock profiler."""
+        if self._profiler is None:
+            return fn(*args)
+        return self._profiler.timed((kind,) + self._profile_key, fn, *args)
+
     def _write_slot(self, slot: int, req_cache):
         self.cache = _write_slot_jit(self.cache, req_cache, jnp.int32(slot))
 
@@ -329,7 +342,8 @@ class ServingEngine:
         # below would race with the still-dispatching decode (observed as a
         # rare wrong-slot cache write under load)
         pos = jnp.asarray(self.positions.copy())
-        toks, logits, self.cache, self.key = self._step(
+        toks, logits, self.cache, self.key = self._dispatch(
+            "engine_step", self._step,
             self.params, jnp.asarray(self._last.copy()), self.cache, pos,
             self.key, jnp.asarray(self._temps.copy()))
         toks_host = np.asarray(jax.device_get(toks))       # the one host sync

@@ -1,0 +1,295 @@
+"""Flight recorder: virtual-clock span tracing, time-series metrics,
+jit profiling, and the perf ratchet (DESIGN.md section 14).
+
+The load-bearing invariants:
+  * tracing and metrics are pure observers — a run with both enabled
+    produces byte-identical telemetry JSON to a run with both off
+  * record -> replay produces byte-identical Chrome trace files
+  * the trace validates against the trace-event schema: matched b/e
+    pairs, non-overlapping X spans per serial track, >=4 track types
+  * every request's spans nest inside its [arrival, done] window, and
+    sum(breakdown) == latency exactly, under both decode transports
+  * the aggregate.py ratchet passes on the checked-in trajectory and
+    fails on a synthetically inflated p95
+  * aggregate.py's KNOWN_SCHEMA_VERSIONS (duplicated so CI can run it
+    without PYTHONPATH=src) stays in sync with telemetry.SCHEMA_VERSION
+"""
+import dataclasses
+import json
+import math
+import os
+import sys
+
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.clock import EventLoop
+from repro.runtime.metrics import (CountersView, JitProfiler, MetricsRegistry,
+                                   MetricsSampler, read_metrics_jsonl)
+from repro.runtime.simulator import (CellSpec, SimConfig, Simulation,
+                                     trace_arrivals)
+from repro.runtime.telemetry import SCHEMA_VERSION, Telemetry
+from repro.runtime.tracing import (NULL_TRACER, Tracer, validate_chrome_trace)
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def small_cfg(layers=4):
+    return dataclasses.replace(get_config("qwen3-8b").reduced(),
+                               num_layers=layers)
+
+
+def timing_cfg(**kw):
+    defaults = dict(cfg=small_cfg(), mode="split", wire_mode="int8",
+                    network="3g", num_devices=4, num_requests=16,
+                    arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
+                    d_r=16, numerics=False, seed=0)
+    defaults.update(kw)
+    return SimConfig(**defaults)
+
+
+MIXED = (CellSpec(name="3g0", network="3g", num_devices=4, device="jetson"),
+         CellSpec(name="wifi1", network="wifi", num_devices=4,
+                  device="phone"))
+
+
+def topo_cfg(**kw):
+    defaults = dict(topology=MIXED, adapt=True, transport="auto",
+                    num_requests=24, max_new_tokens=4,
+                    background_load=lambda t: 0.5)
+    defaults.update(kw)
+    return timing_cfg(**defaults)
+
+
+# ---------------------------------------------------------------- tracing
+
+def test_traced_topology_validates_chrome_schema():
+    sim = Simulation(topo_cfg(trace=True))
+    sim.run()
+    doc = json.loads(sim.tracer.to_json())
+    assert doc["otherData"]["schema_version"] == 1
+    stats = validate_chrome_trace(doc, min_track_types=4)
+    # edge + wire + cloud + ctl (+ slot) all present
+    assert stats["track_types"] >= 4
+    assert stats["X"] > 0 and stats["b"] > 0 and stats["i"] > 0
+
+
+def test_trace_record_replay_byte_identical(tmp_path):
+    path = str(tmp_path / "arrivals.jsonl")
+    sim1 = Simulation(topo_cfg(trace=True))
+    sim1.record_trace(path)
+    sim1.run()
+    sim2 = Simulation(topo_cfg(trace=True, arrivals=trace_arrivals(path)))
+    sim2.run()
+    assert sim1.tracer.to_json() == sim2.tracer.to_json()
+
+
+def test_tracing_and_metrics_are_pure_observers():
+    """The regression test for the opt-out: a timing-only sim with the
+    flight recorder fully enabled must produce telemetry byte-identical
+    to one with it off."""
+    plain = Simulation(timing_cfg()).run().to_json()
+    observed = Simulation(timing_cfg(trace=True, metrics=True)).run()
+    assert observed.to_json() == plain
+
+
+@pytest.mark.parametrize("transport", ["cache_handoff", "streamed"])
+def test_breakdown_sums_and_spans_nest(transport):
+    """Property-style: for every request, sum(breakdown) == latency_s, and
+    every trace span carrying its uid lies inside [t_arrival, t_done]."""
+    sim = Simulation(topo_cfg(transport=transport, adapt=False,
+                              background_load=None, max_new_tokens=4,
+                              trace=True))
+    tel = sim.run()
+    assert len(tel.traces) == 24
+    for t in tel.traces:
+        assert sum(t.breakdown().values()) == pytest.approx(t.latency_s,
+                                                            abs=1e-12)
+    doc = json.loads(sim.tracer.to_json())
+    validate_chrome_trace(doc)  # per-track X spans do not overlap
+    window = {t.uid: (t.t_arrival * 1e6, t.t_done * 1e6)
+              for t in tel.traces}
+    checked = 0
+    for ev in doc["traceEvents"]:
+        uid = ev.get("args", {}).get("uid")
+        if uid is None or ev["ph"] not in ("X",):
+            continue
+        lo, hi = window[uid]
+        eps = 1e-3  # microsecond rounding
+        assert ev["ts"] >= lo - eps
+        assert ev["ts"] + ev["dur"] <= hi + eps
+        checked += 1
+    assert checked > 0
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER.enabled
+    NULL_TRACER.complete("t", "x", 0.0, 1.0)
+    NULL_TRACER.instant("t", "x", 0.0)
+    NULL_TRACER.async_span("t", "x", 1, 0.0, 1.0)
+    assert Tracer().enabled
+
+
+def test_validator_rejects_overlap_and_unmatched_async():
+    tr = Tracer()
+    tr.complete("edge/c/d0", "a", 0.0, 2.0)
+    tr.complete("edge/c/d0", "b", 1.0, 3.0)  # overlaps on one serial track
+    with pytest.raises(ValueError, match="overlap"):
+        validate_chrome_trace(json.loads(tr.to_json()), min_track_types=1)
+    tr2 = Tracer()
+    tr2.events.append({"ph": "b", "name": "q", "cat": "req", "id": "1",
+                       "pid": 1, "tid": 1, "ts": 0.0})
+    with pytest.raises(ValueError, match="unmatched"):
+        validate_chrome_trace(json.loads(tr2.to_json()), min_track_types=0)
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_metrics_sampler_timeline(tmp_path):
+    sim = Simulation(topo_cfg(metrics=True, metrics_interval_s=0.02))
+    sim.run()
+    rows = sim.sampler.rows
+    assert len(rows) >= 2
+    ts = [r["t"] for r in rows]
+    assert ts == sorted(ts)
+    names = set(sim.sampler.sources)
+    assert {"cloud/load", "cell/3g0/queue_depth", "cell/wifi1/in_flight",
+            "wire/3g0/up_goodput_bps"} <= names
+    for r in rows:
+        assert set(r) == names | {"t"}
+    path = str(tmp_path / "metrics.jsonl")
+    sim.sampler.write(path)
+    assert read_metrics_jsonl(path) == rows
+
+
+def test_counters_view_backcompat():
+    """Telemetry.counters migrated onto MetricsRegistry but must keep
+    behaving like the old defaultdict(float)."""
+    tel = Telemetry()
+    tel.counters["prefill_batches"] += 1
+    tel.counters["prefill_batches"] += 2
+    tel.counters["decode_turns"] = 5
+    assert tel.counters["prefill_batches"] == 3.0
+    assert tel.counters["never_touched"] == 0.0
+    assert dict(tel.counters)["decode_turns"] == 5.0
+    assert isinstance(tel.counters, CountersView)
+    # and it is a live view, not a copy
+    assert tel.registry.counter("decode_turns").value == 5.0
+
+
+def test_registry_histogram_and_gauge():
+    reg = MetricsRegistry()
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("lat").observe(v)
+    s = reg.histogram("lat").summary()
+    assert s["count"] == 4 and s["p50"] == pytest.approx(2.5)
+    reg.gauge("depth").set(7)
+    assert reg.to_dict()["gauges"]["depth"] == 7.0
+
+
+def test_schedule_every_cancel():
+    loop = EventLoop()
+    seen = []
+    cancel = loop.schedule_every(0.1, lambda: seen.append(loop.now))
+    loop.schedule(0.35, cancel)
+    loop.schedule(1.0, lambda: None)  # keep the loop alive past the cancel
+    loop.run()
+    assert len(seen) == 3  # 0.1, 0.2, 0.3 — nothing after cancel
+
+
+def test_throughput_nan_for_zero_span():
+    """A zero-width request span has no defined rate: nan (was inf), so
+    JSON consumers render it as missing instead of blowing up."""
+    from repro.runtime.telemetry import RequestTrace
+    tel = Telemetry()
+    tel.traces.append(RequestTrace(uid=0, device=0, mode="split",
+                                   wire_mode="int8", split=1, prompt_len=4))
+    assert math.isnan(tel.summary()["throughput_rps"])
+    real = Simulation(timing_cfg()).run()
+    assert real.summary()["throughput_rps"] > 0
+    assert json.loads(real.to_json())["schema_version"] == SCHEMA_VERSION
+
+
+# ---------------------------------------------------------------- jit profile
+
+def test_jit_profile_numerics_smoke():
+    cfg = timing_cfg(cfg=small_cfg(layers=2), numerics=True, num_requests=3,
+                     num_devices=2, prompt_len=8, max_new_tokens=2,
+                     profile_jit=True)
+    sim = Simulation(cfg)
+    tel = sim.run()
+    assert tel.jit_profile is not None
+    h = tel.jit_profile["headline"]
+    assert h["entries"] > 0 and h["calls"] >= h["entries"]
+    assert 0.0 <= h["compile_fraction"] <= 1.0
+    assert tel.counters["bank_jit_cache_misses"] > 0
+    # profile rides in telemetry JSON only when enabled
+    assert "jit_profile" in json.loads(tel.to_json())
+    plain = Simulation(timing_cfg()).run()
+    assert plain.jit_profile is None
+    assert "jit_profile" not in json.loads(plain.to_json())
+
+
+def test_jit_profiler_first_vs_steady():
+    prof = JitProfiler()
+    for _ in range(3):
+        prof.timed(("k", 1), lambda x: x + 1, 1)
+    assert prof.first_calls == 1 and prof.steady_calls == 2
+    assert prof.summary()["k/1"]["calls"] == 3
+
+
+# ---------------------------------------------------------------- ratchet
+
+def _aggregate():
+    sys.path.insert(0, EXPERIMENTS)
+    try:
+        import aggregate
+    finally:
+        sys.path.pop(0)
+    return aggregate
+
+
+def test_schema_version_crosscheck():
+    """aggregate.py duplicates the known schema versions on purpose (the CI
+    runtime-table job runs without PYTHONPATH=src); this is the sync
+    check."""
+    agg = _aggregate()
+    assert SCHEMA_VERSION in agg.KNOWN_SCHEMA_VERSIONS
+
+
+def test_ratchet_passes_on_checked_in_trajectory():
+    agg = _aggregate()
+    doc = json.load(open(os.path.join(EXPERIMENTS, "BENCH_runtime.json")))
+    runs = doc["runs"]
+    assert len(runs) >= 2
+    report = agg.check_regression(runs[-1], runs)
+    # the fresh run itself is excluded from the baselines by content
+    assert report["baseline_runs"] == len(runs) - 1
+    assert report["checked"] > 0
+    assert report["violations"] == []
+
+
+def test_ratchet_fails_on_inflated_p95():
+    import copy
+    agg = _aggregate()
+    runs = json.load(
+        open(os.path.join(EXPERIMENTS, "BENCH_runtime.json")))["runs"]
+    bad = copy.deepcopy(runs[-1])
+    bad["networks"]["3g"]["split_int8"]["latency_p95_ms"] *= 1.2
+    report = agg.check_regression(bad, runs)
+    keys = [v["key"] for v in report["violations"]]
+    assert "networks.3g.split_int8.latency_p95_ms" in keys
+    # higher-is-better direction: a throughput drop is also caught
+    bad2 = copy.deepcopy(runs[-1])
+    bad2["networks"]["3g"]["split_int8"]["throughput_rps"] *= 0.5
+    report2 = agg.check_regression(bad2, runs)
+    assert any("throughput_rps" in v["key"] for v in report2["violations"])
+
+
+def test_ratchet_direction_inference():
+    agg = _aggregate()
+    assert agg._direction("networks.3g.split_int8.latency_p95_ms") == -1
+    assert agg._direction("networks.3g.split_speedup_vs_cloud") == 1
+    assert agg._direction("x.throughput_rps") == 1
+    assert agg._direction("workload.requests") == 0  # not ratcheted
+    assert agg._direction("adaptive.split_at_high_load") == 0
