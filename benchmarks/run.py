@@ -303,7 +303,9 @@ def bench_runtime():
     the SAME arrival trace via the shared builder), the adaptive
     controller's split trajectory under a cloud-load ramp, and a multi-cell
     topology scenario (heterogeneous fleets on per-cell radios vs the same
-    fleet through one shared 3g wire, per-cell controllers diverging).
+    fleet through one shared 3g wire, per-cell controllers diverging), and a
+    resilience scenario (the same topology under a chaos fault schedule —
+    availability, tail latency and migration/retry counts vs the calm run).
     Emits one JSON document (runtime/json row) with the full comparison."""
     import dataclasses
 
@@ -450,6 +452,33 @@ def bench_runtime():
         shared_tel.summary()["latency_p50_ms"] /
         tel.summary()["latency_p50_ms"], 2)
     result["topology"] = topo
+    # resilience: the same heterogeneous topology under a chaos schedule
+    # (device churn, a 3g->wifi handover, a wire blackout, a cloud outage
+    # window, a mid-run join) vs the calm run above — what availability and
+    # tail latency survive, and how much migration/retry work it took
+    chaos_cfg = dataclasses.replace(
+        topo_base, topology=cells,
+        faults="handover@0.05:3g-jet>wifi,blackout@0.08:wifi-ph+0.03,"
+               "outage@0.12+0.1,leave@0.15:1,join@0.2:3g-jet")
+    chaos = Simulation(chaos_cfg).run().summary()
+    calm = tel.summary()
+    result["resilience"] = {
+        "faults": chaos_cfg.faults,
+        "availability_pct": round(chaos["availability_pct"], 2),
+        "latency_p99_ms": round(chaos["latency_p99_ms"], 3),
+        "baseline_p99_ms": round(calm["latency_p99_ms"], 3),
+        "n_migrated": int(chaos["n_migrated"]),
+        "n_retried": int(chaos["n_retried"]),
+        "n_failed": int(chaos["n_failed"]),
+        "n_edge_fallback": int(chaos["n_fallback"]),
+    }
+    print(f"runtime/resilience,0,"
+          f"avail={chaos['availability_pct']:.1f}% "
+          f"p99={chaos['latency_p99_ms']:.2f}ms "
+          f"(calm {calm['latency_p99_ms']:.2f}ms) "
+          f"migrated={result['resilience']['n_migrated']} "
+          f"retried={result['resilience']['n_retried']} "
+          f"failed={result['resilience']['n_failed']}")
     us = (time.perf_counter() - t0) * 1e6
     print(f"runtime/topology,{us/15:.0f},"
           f"3g-jet=(s{topo['cells']['3g-jet']['final_split']},"

@@ -20,7 +20,7 @@ from collections import defaultdict
 # runtime-table job runs this script without PYTHONPATH=src, so it must not
 # import repro; tests/test_observability.py cross-checks the two stay in
 # sync).  None covers trajectory runs recorded before the field existed.
-KNOWN_SCHEMA_VERSIONS = (None, 2)
+KNOWN_SCHEMA_VERSIONS = (None, 2, 3)
 
 ARCH_ORDER = ["qwen3-14b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
               "pixtral-12b", "whisper-base", "gemma-7b", "gemma3-12b",
@@ -290,6 +290,17 @@ def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
               f"{shared['fairness_jain']:.3f}) — "
               f"{topo['isolated_vs_shared_p50_speedup']}x slower than "
               f"per-cell radios")
+    res = last.get("resilience")
+    if res:
+        print(f"\n#### Resilience (same topology under a chaos fault "
+              f"schedule)\n")
+        print(f"faults: {res['faults']}")
+        print(f"availability {res['availability_pct']:.1f}% "
+              f"({res['n_failed']} failed), p99 "
+              f"{res['latency_p99_ms']:.2f}ms vs calm "
+              f"{res['baseline_p99_ms']:.2f}ms; "
+              f"{res['n_migrated']} migrated, {res['n_retried']} retried, "
+              f"{res['n_edge_fallback']} edge fallbacks")
     if len(runs) > 1:
         print("\n#### Perf trajectory (split int8 on 3g, per run)\n")
         for r in runs:

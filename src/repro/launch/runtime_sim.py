@@ -131,6 +131,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-numerics", action="store_true",
                     help="timing-only (skip the real jax computation)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="inject a fault schedule: comma-separated "
+                         "'kind@t[:arg][+dur]' events (leave@0.05:2, "
+                         "join@0.2:<cell>, handover@0.1:<cell>><net>, "
+                         "blackout@0.15:<cell>+0.05, outage@0.3+0.2) or "
+                         "'random:<seed>' for a seeded chaos schedule over "
+                         "the parsed topology (DESIGN.md section 15)")
     ap.add_argument("--record-trace", default=None, metavar="JSONL",
                     help="record this run's arrival stream (cell, device, t, "
                          "prompt) for later --replay-trace")
@@ -158,8 +165,10 @@ def main():
 
     from repro.configs import get_config
     from repro.core.profiler import GTX_1080TI, JETSON_TX2
+    from repro.runtime.faults import FaultSchedule
     from repro.runtime.simulator import (SimConfig, Simulation,
-                                         parse_topology, trace_arrivals)
+                                         parse_topology, trace_arrivals,
+                                         trace_faults)
 
     cfg = get_config(args.arch).reduced()
     if args.layers and args.layers != cfg.num_layers:
@@ -173,8 +182,21 @@ def main():
         else GTX_1080TI
     topology = parse_topology(args.topology) if args.topology else None
     arrivals = None
+    faults = None
     if args.replay_trace:
         arrivals = trace_arrivals(args.replay_trace)
+        faults = trace_faults(args.replay_trace)
+    if args.faults:
+        if args.faults.startswith("random:"):
+            seed = int(args.faults.split(":", 1)[1])
+            cells = tuple(c.name for c in topology) if topology \
+                else ("cell0",)
+            n_dev = sum(c.num_devices for c in topology) if topology \
+                else args.devices
+            faults = FaultSchedule.random(seed, cells=cells,
+                                          num_devices=n_dev)
+        else:
+            faults = FaultSchedule.parse(args.faults)
     sim_cfg = SimConfig(
         cfg=cfg, mode=args.mode, wire_mode=args.wire_mode,
         transport=args.transport, network=args.network, duplex=args.duplex,
@@ -188,7 +210,7 @@ def main():
         adapt=args.adapt, control_interval_s=args.control_interval,
         objective=args.objective, slo_ms=args.slo_ms,
         max_concurrent=args.max_concurrent, seed=args.seed,
-        numerics=not args.no_numerics, arrivals=arrivals,
+        numerics=not args.no_numerics, arrivals=arrivals, faults=faults,
         trace=bool(args.trace_out), metrics=bool(args.metrics_out),
         metrics_interval_s=args.metrics_interval,
         profile_jit=args.profile_jit)
@@ -243,6 +265,18 @@ def main():
         print(f"streamed decode: mean per-token RTT "
               f"{s['mean_stream_rtt_ms']:.2f} ms "
               f"(row up + cloud turn + id down)")
+    if sim.injector is not None:
+        print(f"\nfaults ({len(sim.fault_schedule)} injected): "
+              f"availability {s['availability_pct']:.1f}%  "
+              f"done {s['n_done']:.0f}  failed {s['n_failed']:.0f}  "
+              f"migrated {s['n_migrated']:.0f}  "
+              f"retried {s['n_retried']:.0f}  "
+              f"edge-fallback {s['n_fallback']:.0f}")
+        for ev in sim.fault_schedule:
+            tgt = ev.cell or (f"dev{ev.device}" if ev.device >= 0 else "cloud")
+            extra = f" -> {ev.network}" if ev.network else ""
+            extra += f" for {ev.duration*1e3:.0f} ms" if ev.duration else ""
+            print(f"  {ev.t:7.3f}s  {ev.kind:<13} {tgt}{extra}")
     if tel.decisions:
         print("\ncontroller decisions (t, cell, cloud_load, split, "
               "transport):")

@@ -57,8 +57,20 @@ class SimRequest:
     cloud_pos: int = 0
     stream_row: Optional[tuple] = None        # last (payload, scales) row
     last_token: int = -1
-    produced: int = 0                         # ids sent down so far
+    produced: int = 0                         # ids RECEIVED at the mobile
     stream_t0: Optional[float] = None         # RTT accounting anchor
+    # fault/recovery state machine (runtime/faults.py) — inert without an
+    # injector: home mirrors the arrival device, state advances, and the
+    # rest stays at its default
+    home: int = -1                            # current serving device
+    state: str = "new"                        # lifecycle phase (see faults.py)
+    finished: bool = False                    # terminal (done or failed)
+    epoch: int = 0                            # phase-timer invalidation token
+    retries: int = 0                          # cumulative resend budget used
+    sent_down: int = 0                        # fresh ids shipped by the cloud
+    cloud_served_upto: int = 0                # highest edge_pos served (dedupe)
+    last_sent: Optional[tuple] = None         # (tok, seq) for resends
+    checkpoint: object = None                 # DecodeCheckpoint mid-migration
 
     @property
     def uid(self) -> int:
@@ -88,6 +100,8 @@ class EdgeDevice:
         self.cell_index = cell_index
         self.edge_mp = cost.edge_mp
         self.free_at = 0.0
+        self.evicted = False                # set by FaultInjector on churn
+        self.injector = None                # FaultInjector when faults are on
         self._local_engine = None
         self._numerics_pending: List[SimRequest] = []
         # flight recorder (simulator swaps in a live tracer when tracing);
@@ -113,6 +127,8 @@ class EdgeDevice:
     def on_arrival(self, req: SimRequest) -> None:
         t = req.trace
         t.t_arrival = self.loop.now
+        req.home = self.dev_id
+        req.state = "edge_compute"
         if self.mode == "split" and self.bank is not None:
             self._numerics_pending.append(req)
         start = max(self.loop.now, self.free_at)
@@ -136,9 +152,12 @@ class EdgeDevice:
                 name = "prefill" if self.mode == "split" else "local_infer"
                 self.tracer.complete(self.track, name, start, start + dur,
                                      cat="edge", args={"uid": t.uid, "S": S})
-        self.loop.schedule_at(t.t_edge_done, lambda: self._edge_done(req))
+        self.loop.schedule_at(t.t_edge_done, lambda: self._edge_done(req),
+                              owner=self)
 
     def _edge_done(self, req: SimRequest) -> None:
+        if req.finished:
+            return
         t = req.trace
         t.mobile_energy_mj += self.cost.edge_energy_mj(t.edge_compute_s)
         if self.mode == "split" and self.bank is not None and \
@@ -147,18 +166,106 @@ class EdgeDevice:
         if self.mode == "edge":
             self._finish_local(req)
             return
+        get_transport(t.transport).after_edge_prefill(self, req)
+        self.send_payload(req, first=True)
+
+    def send_payload(self, req: SimRequest, first: bool = False) -> None:
+        """Ship the prefill payload up the cell's wire.  Retries re-enter
+        here (``first=False``): the bytes accumulate, the uplink timestamps
+        re-stamp, and the phase timer re-arms."""
+        if req.finished:
+            return
+        t = req.trace
         transport = get_transport(t.transport)
-        transport.after_edge_prefill(self, req)
         nbytes = transport.prefill_uplink_bytes(self, req)
-        t.wire_bytes = nbytes
+        t.wire_bytes += nbytes
         start, done = self.uplink.transfer(nbytes, self.loop.now, uid=t.uid,
                                            tag="prefill")
         t.t_uplink_start, t.t_uplink_done = start, done
         t.mobile_energy_mj += self.uplink.transfer_energy_mj(nbytes)
-        if self.tracer.enabled:
+        if first and self.tracer.enabled:
             self.tracer.async_span(f"req/{self.cell}", "uplink_wait", t.uid,
                                    t.t_edge_done, start)
-        self.loop.schedule_at(done, lambda: self.server.on_payload(req))
+        req.state = "uplink"
+        self.loop.schedule_at(done, lambda: self.server.on_payload(req),
+                              owner=self.uplink)
+        if self.injector is not None:
+            self.injector.arm(
+                req, lambda: self.server.device_for(req).send_payload(req),
+                "payload")
+
+    def restart_prefill(self, req: SimRequest) -> None:
+        """Migration target: redo the edge prefill for a request whose home
+        device was evicted mid-compute.  The queue timestamps re-stamp (the
+        work really runs twice), so sum(breakdown) == latency still holds."""
+        if req.finished or self.evicted:
+            return
+        t = req.trace
+        if self.mode == "split" and self.bank is not None and \
+                req.payload is None and req not in self._numerics_pending:
+            self._numerics_pending.append(req)
+        start = max(self.loop.now, self.free_at)
+        S = t.prompt_len
+        if self.mode == "split":
+            dur = self.cost.edge_prefill_s(t.split, S, self.d_r)
+        elif self.mode == "edge":
+            dur = self.cost.full_prefill_s(S, where="edge")
+            dur += sum(self.cost.decode_step_s(1, where="edge")
+                       for _ in range(max(req.max_new_tokens - 1, 0)))
+        else:
+            dur = 0.0
+        t.t_edge_start = start
+        t.t_edge_done = start + dur
+        self.free_at = t.t_edge_done
+        self._recent_starts.append((start, t.t_edge_done))
+        req.home = self.dev_id
+        req.state = "edge_compute"
+        if self.tracer.enabled and dur > 0:
+            name = "prefill" if self.mode == "split" else "local_infer"
+            self.tracer.complete(self.track, name, start, start + dur,
+                                 cat="edge", args={"uid": t.uid, "S": S})
+        self.loop.schedule_at(t.t_edge_done, lambda: self._edge_done(req),
+                              owner=self)
+
+    def fallback_local(self, req: SimRequest) -> None:
+        """Degraded edge-only service for a split request whose cloud half
+        is unreachable: run the FULL model on this device."""
+        if req.finished or self.evicted:
+            return
+        t = req.trace
+        start = max(self.loop.now, self.free_at)
+        dur = self.cost.full_prefill_s(t.prompt_len, where="edge")
+        dur += sum(self.cost.decode_step_s(1, where="edge")
+                   for _ in range(max(req.max_new_tokens - 1, 0)))
+        self.free_at = start + dur
+        self._recent_starts.append((start, start + dur))
+        req.home = self.dev_id
+        req.state = "edge_fallback"
+        if self.tracer.enabled:
+            self.tracer.complete(self.track, "local_infer", start,
+                                 start + dur, cat="edge",
+                                 args={"uid": t.uid, "S": t.prompt_len})
+        self.loop.schedule_at(start + dur,
+                              lambda: self._fallback_done(req, dur),
+                              owner=self)
+
+    def _fallback_done(self, req: SimRequest, dur: float) -> None:
+        if req.finished:
+            return
+        t = req.trace
+        t.mobile_energy_mj += self.cost.edge_energy_mj(dur)
+        if self.bank is not None and req.tokens is not None:
+            eng = self._ensure_local_engine()
+            req.engine_req = eng.submit(req.tokens,
+                                        max_new_tokens=req.max_new_tokens)
+            eng.run()
+            t.new_tokens = len(req.engine_req.generated)
+        else:
+            t.new_tokens = req.max_new_tokens
+        t.t_first_token = t.t_done = self.loop.now
+        t.clamp_chain()
+        self.telemetry.record(t)
+        self.server.sim_request_done(req)
 
     def _compute_edge_batch(self, req: SimRequest) -> None:
         """One batched edge_half over every queued arrival sharing this
@@ -195,17 +302,7 @@ class EdgeDevice:
         t.t_uplink_start = t.t_uplink_done = t.t_cloud_start = t.t_edge_done
         t.t_first_token = t.t_cloud_done = t.t_done = t.t_edge_done
         if self.bank is not None:
-            # mobile-only runs the same hosted model (split is a no-op for
-            # numerics when both halves share a device); one engine per
-            # device, reused across its serial requests
-            if self._local_engine is None:
-                runner = self.runner(self.numerics_split)
-                # this engine lives on the DEVICE: run it at the edge degree
-                # so mobile-only mode never builds the cloud's mesh
-                self._local_engine = runner.make_engine(
-                    max_batch=1, max_len=self.server.max_len,
-                    mp=runner.edge_mp)
-            eng = self._local_engine
+            eng = self._ensure_local_engine()
             req.engine_req = eng.submit(req.tokens,
                                         max_new_tokens=req.max_new_tokens)
             eng.run()
@@ -214,6 +311,19 @@ class EdgeDevice:
             t.new_tokens = req.max_new_tokens
         self.telemetry.record(t)
         self.server.sim_request_done(req)
+
+    def _ensure_local_engine(self):
+        """Mobile-only / fallback runs the same hosted model (split is a
+        no-op for numerics when both halves share a device); one engine per
+        device, reused across its serial requests.  It lives on the DEVICE:
+        run it at the edge degree so local inference never builds the
+        cloud's mesh."""
+        if self._local_engine is None:
+            runner = self.runner(self.numerics_split)
+            self._local_engine = runner.make_engine(
+                max_batch=1, max_len=self.server.max_len,
+                mp=runner.edge_mp)
+        return self._local_engine
 
 
 class CloudServer:
@@ -251,6 +361,11 @@ class CloudServer:
         self._prefill_busy_until = 0.0            # serial accelerator frontier
         self.peak_active = 0
         self.tracer = NULL_TRACER                 # swapped in by the simulator
+        self.injector = None                      # FaultInjector when faults on
+        # cloud-outage window: ingress (payloads, rows) is dropped while
+        # now < outage_until; work already admitted finishes decoding —
+        # the modeled outage is an ingress blackout, not engine surgery
+        self.outage_until = float("-inf")
 
     # -- load signal --------------------------------------------------------
     @property
@@ -266,25 +381,55 @@ class CloudServer:
 
     def current_load(self, now: float) -> float:
         """Combined congestion the mobile observes when it pings the server:
-        external tenants (background) plus this fleet's own occupancy."""
+        external tenants (background) plus this fleet's own occupancy.
+        During a cloud outage the ping itself fails — the controller reads
+        the ceiling and routes work edge-heavy."""
+        if now < self.outage_until:
+            return 0.99
         bg = min(max(self.background_load(now), 0.0), 0.99)
         occ = self.num_active / self.max_concurrent
         return min(1.0 - (1.0 - bg) * (1.0 - occ), 0.99)
 
+    def device_for(self, req: SimRequest) -> Optional[object]:
+        """The device currently serving ``req`` — its migration home when
+        the fault layer re-homed it, else the arrival device."""
+        if not self.devices:
+            return None
+        return self.devices[req.home if req.home >= 0 else req.trace.device]
+
     def wire_for(self, req: SimRequest) -> Optional[Wire]:
         """The Wire serving ``req``'s cell (responses go back down the same
         link the request came up — per-cell downlink contention)."""
-        if self.devices:
-            return self.devices[req.trace.device].uplink
-        return self.wire
+        dev = self.device_for(req)
+        return dev.uplink if dev is not None else self.wire
 
     # -- request flow -------------------------------------------------------
     def on_payload(self, req: SimRequest) -> None:
+        if req.finished:
+            return
+        if self.injector is not None:
+            if self.loop.now < self.outage_until:
+                self.telemetry.counters["fault_outage_dropped_payloads"] += 1
+                return
+            if req.slot >= 0 or req in self.pending:
+                # a spurious retry: the original made it after all
+                self.telemetry.counters["fault_duplicate_payloads"] += 1
+                return
+        req.state = "cloud"
         self.pending.append(req)
         self._kick()
 
     def on_stream_row(self, req: SimRequest) -> None:
         """A streamed decode row arrived over the uplink."""
+        if req.finished:
+            return
+        if self.injector is not None:
+            if self.loop.now < self.outage_until:
+                self.telemetry.counters["fault_outage_dropped_rows"] += 1
+                return
+            if req in self.stream_ready:
+                self.telemetry.counters["fault_duplicate_stream_rows"] += 1
+                return
         self.stream_ready.append(req)
         self._kick()
 
@@ -318,7 +463,7 @@ class CloudServer:
         # decode — at once, exactly like one-at-a-time admission
         start = max(now, self._prefill_busy_until)
         admitted = 0
-        while self.pending:
+        while self.pending and now >= self.outage_until:
             slot = self._free_slot()
             if slot < 0:
                 break
@@ -355,6 +500,8 @@ class CloudServer:
         self.slots[slot] = req
         self.slot_history.append((t.uid, slot))
         self.peak_active = max(self.peak_active, self.num_active)
+        if self.injector is not None:
+            self.injector.ack(req)          # payload made it: cancel retries
         if self.tracer.enabled:
             self.tracer.async_span(f"req/{t.cell}", "cloud_queue", t.uid,
                                    t.t_uplink_done, start)
@@ -395,7 +542,8 @@ class CloudServer:
         return self._cloud_results.pop(req.uid)
 
     def _prefill_done(self, req: SimRequest) -> None:
-        get_transport(req.trace.transport).start_cloud_decode(self, req)
+        if not req.finished:       # failed mid-prefill: drop the result
+            get_transport(req.trace.transport).start_cloud_decode(self, req)
         self.loop.schedule(0.0, self._service)
 
     def _stream_turn(self, now: float) -> None:
@@ -451,6 +599,8 @@ class CloudServer:
         """Cloud-side decode finished (cache-handoff / cloud-only): free the
         slot and ship the whole sampled-id batch down the Wire; the request
         is delivered — and recorded — when the downlink drains."""
+        if req.finished:
+            return
         t = req.trace
         t.t_cloud_done = self.loop.now
         if req.engine_req is not None:
@@ -459,6 +609,13 @@ class CloudServer:
             t.new_tokens = req.max_new_tokens
         if req.slot >= 0:
             self.release_slot(req, self.loop.now)
+        self._ship_ids(req)
+
+    def _ship_ids(self, req: SimRequest) -> None:
+        """Ship the whole id batch down; retries re-enter here."""
+        if req.finished:
+            return
+        t = req.trace
         wire = self.wire_for(req)
         if wire is None:                    # no modeled downlink: instant
             self._deliver(req)
@@ -468,11 +625,16 @@ class CloudServer:
         start, done = wire.transfer_down(nbytes, self.loop.now, uid=t.uid,
                                          tag="ids")
         t.mobile_energy_mj += wire.downlink_energy_mj(nbytes)
-        self.loop.schedule_at(done, lambda: self._deliver(req))
+        req.state = "downlink"
+        self.loop.schedule_at(done, lambda: self._deliver(req), owner=wire)
+        if self.injector is not None:
+            self.injector.arm(req, lambda: self._ship_ids(req), "ids")
 
-    def release_slot(self, req: SimRequest, now: float) -> None:
+    def release_slot(self, req: SimRequest,
+                     now: Optional[float] = None) -> None:
         """Free ``req``'s engine slot, closing its residency span (admission
         prefill start -> release) on the slot's trace track."""
+        now = self.loop.now if now is None else now
         slot = req.slot
         self.slots[slot] = None
         req.slot = -1
@@ -484,14 +646,21 @@ class CloudServer:
                                        "transport": t.transport})
 
     def _deliver(self, req: SimRequest) -> None:
+        if req.finished:
+            return
         t = req.trace
         t.t_done = self.loop.now
         # batch return: the mobile sees its first token when the whole id
         # shipment lands — the same observation point streamed TTFT uses
         t.t_first_token = t.t_done
+        t.clamp_chain()
         self.telemetry.record(t)
         self.sim_request_done(req)
 
     def sim_request_done(self, req: SimRequest) -> None:
+        if req.finished:
+            return
+        req.finished = True
+        req.state = "done"
         if self.on_done is not None:
             self.on_done(req)

@@ -90,7 +90,13 @@ class AdaptiveSplitController:
     def stop(self) -> None:
         self.running = False
 
-    def decide(self, now: float) -> int:
+    def poke(self, now: float, reason: str = "poke") -> None:
+        """Out-of-band re-score (e.g. the fault layer after a link
+        handover): decide immediately instead of waiting for the tick."""
+        if self.running:
+            self.decide(now, reason=reason)
+
+    def decide(self, now: float, reason: str = "tick") -> int:
         load = self.cloud_load(now)
         link_bps = self.uplink.observed_bytes_per_s(now)
         transports = ("cache_handoff", "streamed") \
@@ -112,11 +118,12 @@ class AdaptiveSplitController:
         self.telemetry.record_decision(ControlDecision(
             t=now, cloud_load=load, link_bytes_per_s=link_bps,
             old_split=old, new_split=best["split"],
-            transport=best["transport"], cell=self.cell))
+            transport=best["transport"], cell=self.cell, reason=reason))
         self.tracer.instant(
             f"ctl/{self.cell}", "decision", now, cat="control",
             args={"split": best["split"], "transport": best["transport"],
-                  "cloud_load": load, "link_bytes_per_s": link_bps})
+                  "cloud_load": load, "link_bytes_per_s": link_bps,
+                  "reason": reason})
         if best["split"] != old:
             self.set_split(best["split"])
         if self.set_transport is not None and \

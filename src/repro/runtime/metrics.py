@@ -13,6 +13,10 @@ Three layers:
   counts) into one row; rows export as JSONL (``--metrics-out``).
   Sampling is *passive*: sources only read simulator state, so a sampled
   run's telemetry is identical to an unsampled one.
+
+The fault layer (:mod:`repro.runtime.faults`) reports through the same
+registry: ``fault_*`` counters (injections, retries, migrations, drops,
+fallbacks) and the ``fault_backoff_s`` histogram of retry backoff delays.
 * :class:`JitProfiler` — **wall-clock** compile-vs-execute attribution per
   jit cache entry (first call = compile + execute, later calls = steady
   state) for ``SplitModelBank`` / ``ServingEngine`` hot paths.  Wall time
@@ -80,6 +84,7 @@ class Histogram:
         from repro.runtime.telemetry import percentile
         xs = self.values
         return {"count": len(xs), "sum": sum(xs),
+                "mean": sum(xs) / len(xs) if xs else float("nan"),
                 "p50": percentile(xs, 50), "p95": percentile(xs, 95),
                 "max": max(xs) if xs else float("nan")}
 

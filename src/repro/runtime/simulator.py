@@ -47,6 +47,7 @@ from repro.core.profiler import (GTX_1080TI, JETSON_TX2, HardwareProfile,
                                  get_device_class)
 from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
 from repro.runtime.clock import EventLoop
+from repro.runtime.faults import FaultInjector, FaultSchedule, RecoveryPolicy
 from repro.runtime.metrics import JitProfiler, MetricsRegistry, MetricsSampler
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
@@ -201,16 +202,25 @@ def poisson_arrivals(*, num_devices: int, num_requests: int,
     return out
 
 
-TRACE_FORMAT = "arrival-trace-v1"
+# v2 adds the optional "faults" key to the header (the run's FaultSchedule,
+# so a recorded chaotic run replays its fault sequence byte-for-byte); v1
+# traces stay readable — they simply carry no schedule.
+TRACE_FORMAT = "arrival-trace-v2"
+LEGACY_TRACE_FORMATS = ("arrival-trace-v1",)
 
 
-def record_arrivals(arrivals: Sequence[Arrival], path: str) -> None:
+def record_arrivals(arrivals: Sequence[Arrival], path: str,
+                    faults=None) -> None:
     """Write an arrival stream to JSONL (one line per arrival, preceded by
     a format header).  Floats round-trip exactly (json uses shortest-repr),
-    so record -> replay -> record is byte-identical."""
+    so record -> replay -> record is byte-identical.  ``faults`` (a
+    :class:`~repro.runtime.faults.FaultSchedule`) rides in the header —
+    recorded even when empty, so the replay re-enables the fault layer."""
+    header = {"format": TRACE_FORMAT, "n": len(arrivals)}
+    if faults is not None:
+        header["faults"] = faults.to_obj()
     with open(path, "w") as f:
-        f.write(json.dumps({"format": TRACE_FORMAT,
-                            "n": len(arrivals)}) + "\n")
+        f.write(json.dumps(header) + "\n")
         for a in arrivals:
             tokens = None if a.tokens is None else \
                 [int(x) for x in np.asarray(a.tokens)]
@@ -219,11 +229,22 @@ def record_arrivals(arrivals: Sequence[Arrival], path: str) -> None:
                                sort_keys=True) + "\n")
 
 
+def trace_faults(path: str) -> Optional[FaultSchedule]:
+    """The fault schedule recorded in a v2 trace header, or None for a
+    fault-free (or v1) trace."""
+    with open(path) as f:
+        header = json.loads(f.readline())
+    if "faults" not in header:
+        return None
+    return FaultSchedule.from_obj(header["faults"])
+
+
 def trace_arrivals(path: str) -> List[Arrival]:
     """Rebuild the identical Arrival list from a recorded JSONL trace."""
     with open(path) as f:
         header = json.loads(f.readline())
-        assert header.get("format") == TRACE_FORMAT, \
+        assert header.get("format") in (TRACE_FORMAT,) + \
+            LEGACY_TRACE_FORMATS, \
             f"{path}: not an arrival trace (header {header!r})"
         out: List[Arrival] = []
         for line in f:
@@ -288,6 +309,13 @@ class SimConfig:
     metrics: bool = False                    # fixed-interval metrics sampler
     metrics_interval_s: float = 0.01
     profile_jit: bool = False                # wall-clock jit attribution
+    # fault injection (runtime/faults.py): a FaultSchedule, a DSL string
+    # ("leave@0.05:2,outage@0.3+0.1"), or None.  Setting either field
+    # builds the FaultInjector (watchdog + retry state machine included);
+    # with both None the fault layer is entirely absent and the run is
+    # byte-identical to a build without the module.
+    faults: Optional[object] = None
+    recovery: Optional[RecoveryPolicy] = None
 
 
 class Simulation:
@@ -412,6 +440,19 @@ class Simulation:
                     edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp,
                     cell=cell.name, tracer=self.tracer)
                 self.controllers.append(cell.controller)
+        self.injector: Optional[FaultInjector] = None
+        self.fault_schedule: Optional[FaultSchedule] = None
+        if c.faults is not None or c.recovery is not None:
+            sched = c.faults
+            if isinstance(sched, str):
+                sched = FaultSchedule.parse(sched)
+            elif sched is None:
+                sched = FaultSchedule()
+            self.fault_schedule = sched
+            self.injector = FaultInjector(self, sched, c.recovery)
+            self.server.injector = self.injector
+            for d in self.devices:
+                d.injector = self.injector
         self._register_tracks()
         self._in_flight = {cell.name: 0 for cell in self.cells}
         self.sampler = self._build_sampler() if c.metrics else None
@@ -445,18 +486,28 @@ class Simulation:
     def record_trace(self, path: str) -> None:
         """Record this run's arrival stream (cell, device, t, prompt) to
         JSONL; :func:`trace_arrivals` rebuilds the identical list, so the
-        replayed simulation is byte-for-byte identical."""
-        record_arrivals(self.arrivals, path)
+        replayed simulation is byte-for-byte identical.  A configured fault
+        schedule rides in the header (:func:`trace_faults` recovers it)."""
+        record_arrivals(self.arrivals, path, faults=self.fault_schedule)
 
     def run(self) -> Telemetry:
         self._schedule_arrivals()
+        if self.injector is not None:
+            self.injector.start()
         for ctl in self.controllers:
             ctl.start()
         if self.sampler is not None:
             self.sampler.start()
         self.loop.run()
-        assert self._remaining == 0, \
-            f"{self._remaining} requests never completed"
+        if self._remaining:
+            # without the fault layer every request must complete; with it,
+            # anything the watchdog missed is failed as lost — the loop
+            # draining early must never leave a request unaccounted
+            assert self.injector is not None, \
+                f"{self._remaining} requests never completed"
+            for req in self.requests:
+                if not req.finished:
+                    self.injector.fail(req, "lost")
         if self.bank is not None:
             c = self.telemetry.counters
             c["engine_decode_steps"] = sum(
@@ -491,6 +542,8 @@ class Simulation:
             if cell.controller is not None:
                 self.tracer.track(f"ctl/{cell.name}")
             self.tracer.track(f"req/{cell.name}")
+        if self.injector is not None:
+            self.tracer.track("faults/sched")
 
     def _build_sampler(self) -> MetricsSampler:
         """Wire the fixed-interval sampler to read-only views of runtime
@@ -506,6 +559,8 @@ class Simulation:
                            lambda now: float(srv.num_decoding))
         sampler.add_source("cloud/pending",
                            lambda now: float(len(srv.pending)))
+        sampler.add_source("cloud/available",
+                           lambda now: 0.0 if now < srv.outage_until else 1.0)
         for key, w in self.wires.items():
             sampler.add_source(f"wire/{key}/up_backlog_s", w.up_backlog_s)
             sampler.add_source(f"wire/{key}/down_backlog_s",
@@ -515,12 +570,13 @@ class Simulation:
             sampler.add_source(f"wire/{key}/down_goodput_bps",
                                w.observed_down_bytes_per_s)
         for cell in self.cells:
-            devs = self.devices[cell.dev_base:
-                                cell.dev_base + cell.spec.num_devices]
+            # membership resolves at sample time: devices that JOIN the cell
+            # mid-run (fault layer churn) enter the gauge
             sampler.add_source(
                 f"cell/{cell.name}/queue_depth",
-                lambda now, devs=devs: float(sum(d.queue_depth(now)
-                                                 for d in devs)))
+                lambda now, ci=cell.index: float(sum(
+                    d.queue_depth(now) for d in self.devices
+                    if d.cell_index == ci)))
             sampler.add_source(
                 f"cell/{cell.name}/in_flight",
                 lambda now, name=cell.name: float(self._in_flight[name]))
@@ -579,6 +635,8 @@ class Simulation:
                 ctl.stop()
             if self.sampler is not None:
                 self.sampler.stop()
+            if self.injector is not None:
+                self.injector.stop()    # cancel the watchdog: loop can drain
 
     def _schedule_arrivals(self) -> None:
         c = self.sim_cfg
@@ -609,7 +667,13 @@ class Simulation:
                 req.trace.split = self.base_cfg.num_layers
             else:
                 req.trace.split = 0
-            self.devices[dev].on_arrival(req)
+            target = dev if self.injector is None else \
+                self.injector.route(dev)
+            if target < 0:                  # cell fully evicted: dead letter
+                req.trace.t_arrival = self.loop.now
+                self.injector.fail(req, "no_device_in_cell")
+                return
+            self.devices[target].on_arrival(req)
         return fire
 
 

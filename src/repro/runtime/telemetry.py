@@ -19,8 +19,11 @@ from repro.runtime.metrics import MetricsRegistry
 # change meaning so downstream consumers (the CI runtime-table job, the
 # aggregate.py perf ratchet) can reject drift explicitly instead of
 # misreading a stale schema.  v2 = adds schema_version itself + the
-# registry-backed counters + optional jit_profile section.
-SCHEMA_VERSION = 2
+# registry-backed counters + optional jit_profile section.  v3 = request
+# outcomes (outcome/failure/retries/migrations/fallback), latency
+# aggregates partitioned to completed requests, availability/failure
+# counts in the summary, and the controller decision reason.
+SCHEMA_VERSION = 3
 
 
 @dataclass
@@ -51,6 +54,13 @@ class RequestTrace:
     t_first_token: float = 0.0
     t_cloud_done: float = 0.0          # cloud's last involvement
     t_done: float = 0.0                # response fully at the mobile
+    # fault/recovery outcome (schema v3) — all defaults describe the
+    # no-fault world, so calm runs serialize identically modulo the keys
+    outcome: str = "done"              # done | failed
+    failure: str = ""                  # reason when outcome == "failed"
+    retries: int = 0                   # timeout-driven resends
+    migrations: int = 0                # device-to-device migrations
+    fallback: str = ""                 # "edge" when degraded to edge-only
 
     # -- derived breakdown --------------------------------------------------
     @property
@@ -94,6 +104,23 @@ class RequestTrace:
     def ttft_s(self) -> float:
         return self.t_first_token - self.t_arrival
 
+    def clamp_chain(self) -> None:
+        """Forward-max the timestamp chain so every derived phase is
+        non-negative and ``sum(breakdown) == latency`` holds even for
+        requests that failed, fell back, or skipped phases (a request that
+        never reached the cloud leaves those legs at exactly zero).  A
+        monotone chain is untouched, so calling this on a normally
+        completed request is a byte-exact no-op."""
+        prev = self.t_arrival
+        for name in ("t_edge_start", "t_edge_done", "t_uplink_start",
+                     "t_uplink_done", "t_cloud_start", "t_cloud_done",
+                     "t_done"):
+            v = getattr(self, name)
+            if v < prev:
+                setattr(self, name, prev)
+            else:
+                prev = v
+
     def breakdown(self) -> Dict[str, float]:
         return {
             "edge_queue_s": self.edge_queue_s,
@@ -129,6 +156,7 @@ class ControlDecision:
     new_split: int
     transport: str = "cache_handoff"   # decode transport picked alongside
     cell: str = "cell0"                # which cell's controller decided
+    reason: str = "tick"               # tick | handover | ... (why now)
 
 
 class Telemetry:
@@ -154,8 +182,14 @@ class Telemetry:
 
     # -- aggregates ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        lat = [t.latency_s for t in self.traces]
-        ttft = [t.ttft_s for t in self.traces]
+        # latency/ttft/breakdown/throughput aggregate the *completed*
+        # requests only — a fast failure must not improve p95.  Byte,
+        # energy, and RTT totals cover every request (failed ones still
+        # burned radio).  In a no-fault run done == traces, so every
+        # pre-existing number is unchanged.
+        done = [t for t in self.traces if t.outcome == "done"]
+        lat = [t.latency_s for t in done]
+        ttft = [t.ttft_s for t in done]
         out: Dict[str, float] = {"n_requests": len(self.traces)}
         for name, xs in (("latency", lat), ("ttft", ttft)):
             for p in (50, 95, 99):
@@ -164,8 +198,9 @@ class Telemetry:
         if self.traces:
             for key in ("edge_queue_s", "edge_compute_s", "uplink_wait_s",
                         "uplink_s", "cloud_queue_s", "cloud_s", "downlink_s"):
-                out[f"mean_{key[:-2]}_ms"] = sum(
-                    t.breakdown()[key] for t in self.traces) / len(self.traces) * 1e3
+                out[f"mean_{key[:-2]}_ms"] = (sum(
+                    t.breakdown()[key] for t in done) / len(done) * 1e3) \
+                    if done else float("nan")
             out["total_wire_mb"] = sum(t.wire_bytes for t in self.traces) / 1e6
             out["mean_wire_kb"] = sum(
                 t.wire_bytes for t in self.traces) / len(self.traces) / 1e3
@@ -179,21 +214,29 @@ class Telemetry:
                 else 0.0
             out["mean_mobile_energy_mj"] = sum(
                 t.mobile_energy_mj for t in self.traces) / len(self.traces)
-            span = max(t.t_done for t in self.traces) - \
-                min(t.t_arrival for t in self.traces)
+            span = (max(t.t_done for t in done) -
+                    min(t.t_arrival for t in done)) if done else 0.0
             # span == 0 (single request, or all requests at one instant)
             # has no defined rate — nan, not inf, so JSON consumers and
             # the aggregate table render it as missing rather than blowing
             # up comparisons
-            out["throughput_rps"] = len(self.traces) / span if span > 0 \
+            out["throughput_rps"] = len(done) / span if span > 0 \
                 else float("nan")
+            # outcome counts (schema v3): availability counts degraded
+            # edge-fallback completions as served — they got an answer
+            out["n_done"] = len(done)
+            out["n_failed"] = len(self.traces) - len(done)
+            out["n_migrated"] = sum(1 for t in self.traces if t.migrations)
+            out["n_retried"] = sum(1 for t in self.traces if t.retries)
+            out["n_fallback"] = sum(1 for t in self.traces if t.fallback)
+            out["availability_pct"] = 100.0 * len(done) / len(self.traces)
         return out
 
     def split_trajectory(self) -> List[Dict[str, float]]:
         return [{"t": d.t, "cloud_load": d.cloud_load,
                  "link_bytes_per_s": d.link_bytes_per_s,
                  "split": d.new_split, "transport": d.transport,
-                 "cell": d.cell}
+                 "cell": d.cell, "reason": d.reason}
                 for d in self.decisions]
 
     # -- per-cell aggregates / fairness -------------------------------------
@@ -212,14 +255,18 @@ class Telemetry:
         out: Dict[str, Dict[str, float]] = {}
         for cell in self.cells:
             ts = [t for t in self.traces if t.cell == cell]
-            lat = [t.latency_s for t in ts]
+            done = [t for t in ts if t.outcome == "done"]
+            lat = [t.latency_s for t in done]
             out[cell] = {
                 "n_requests": len(ts),
+                "n_failed": len(ts) - len(done),
                 "latency_p50_ms": percentile(lat, 50) * 1e3,
                 "latency_p95_ms": percentile(lat, 95) * 1e3,
-                "latency_mean_ms": sum(lat) / len(lat) * 1e3,
-                "mean_uplink_wait_ms": sum(
-                    t.uplink_wait_s for t in ts) / len(ts) * 1e3,
+                "latency_mean_ms": (sum(lat) / len(lat) * 1e3) if lat
+                else float("nan"),
+                "mean_uplink_wait_ms": (sum(
+                    t.uplink_wait_s for t in done) / len(done) * 1e3)
+                if done else float("nan"),
                 "mean_wire_kb": sum(t.wire_bytes for t in ts) / len(ts) / 1e3,
                 "downlink_kb": sum(t.downlink_bytes for t in ts) / 1e3,
                 "mean_mobile_energy_mj": sum(
@@ -233,9 +280,13 @@ class Telemetry:
         latency (1.0 = perfectly even service, ->1/n as one cell starves).
         Single-cell runs are trivially fair."""
         cells = self.cell_summary()
-        means = [c["latency_mean_ms"] for c in cells.values()]
-        p95s = [c["latency_p95_ms"] for c in cells.values()]
-        if not means:
+        # a cell whose every request failed has nan latencies — it cannot
+        # enter the spread/Jain math (nan poisons every comparison)
+        means = [c["latency_mean_ms"] for c in cells.values()
+                 if math.isfinite(c["latency_mean_ms"])]
+        p95s = [c["latency_p95_ms"] for c in cells.values()
+                if math.isfinite(c["latency_p95_ms"])]
+        if not means or not p95s:
             return {}
         sq = sum(m * m for m in means)
         return {

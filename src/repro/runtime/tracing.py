@@ -16,6 +16,8 @@ runtime emits:
   ``cloud/slot<N>``        slot residency (``u<uid>`` spans, admission ->
                            release)
   ``ctl/<cell>``           controller decisions as instant events
+  ``faults/sched``         injected fault events (``cat="fault"`` instants
+                           carrying ``args.kind`` — validated below)
   request-scoped phases    async spans keyed on the request uid
                            (``request`` / ``edge_queue`` / ``uplink_wait`` /
                            ``cloud_queue``) — the span *tree* each thread
@@ -231,6 +233,9 @@ def validate_chrome_trace(doc: dict, *, min_track_types: int = 4,
             continue
         if "cat" not in ev:
             raise ValueError(f"event {i}: missing cat: {ev}")
+        if ev["cat"] == "fault" and "kind" not in ev.get("args", {}):
+            raise ValueError(f"event {i}: fault event missing args.kind: "
+                             f"{ev}")
         if ph == "X":
             if ev.get("dur", -1) < 0:
                 raise ValueError(f"event {i}: X span needs dur >= 0: {ev}")

@@ -103,11 +103,21 @@ class StreamedTransport(DecodeTransport):
                 cache0, 0, device.server.max_len)
             req.payload = (codes, scales, None)
 
-    def token_at_device(self, device, req, tok) -> None:
+    def token_at_device(self, device, req, tok, seq=None) -> None:
         """A sampled id reached the mobile: either the response is complete,
-        or the edge runs its per-token half and streams the next row."""
+        or the edge runs its per-token half and streams the next row.
+        ``seq`` (1-based, set by the fault-aware send path) makes delivery
+        idempotent: a retried token the original beat is dropped."""
         t = req.trace
         now = device.loop.now
+        if req.finished:
+            return
+        if seq is not None and seq <= req.produced:
+            device.telemetry.counters["fault_duplicate_tokens"] += 1
+            return
+        req.produced = seq if seq is not None else req.produced + 1
+        if device.injector is not None:
+            device.injector.ack(req)        # progress: stale timers die
         if req.stream_t0 is not None:
             t.stream_rtt_s += now - req.stream_t0
             t.stream_steps += 1
@@ -118,9 +128,18 @@ class StreamedTransport(DecodeTransport):
         if req.produced >= req.max_new_tokens:
             t.new_tokens = req.produced
             t.t_done = now
+            t.clamp_chain()
             device.telemetry.record(t)
             device.server.sim_request_done(req)
             return
+        self._schedule_edge_step(device, req)
+
+    def _schedule_edge_step(self, device, req) -> None:
+        """Charge one edge decode step on ``device`` and schedule its
+        completion — also the migration resume point: a checkpointed decode
+        restarts here on its new home."""
+        t = req.trace
+        now = device.loop.now
         start = max(now, device.free_at)
         dur = device.cost.edge_decode_step_s(t.split, device.d_r)
         device.free_at = start + dur
@@ -128,12 +147,15 @@ class StreamedTransport(DecodeTransport):
         device.tracer.complete(device.track, "decode_step", start,
                                start + dur, cat="edge",
                                args={"uid": t.uid, "pos": req.edge_pos})
+        req.state = "edge_decode"
         device.loop.schedule_at(start + dur,
-                                lambda: self.edge_step_done(device, req))
+                                lambda: self.edge_step_done(device, req),
+                                owner=device)
 
     def edge_step_done(self, device, req) -> None:
+        if req.finished:
+            return
         t = req.trace
-        now = device.loop.now
         if device.bank is not None:
             runner = device.runner(t.split)
             tok = np.asarray([[req.last_token]], np.int32)
@@ -141,15 +163,33 @@ class StreamedTransport(DecodeTransport):
                 runner.params, tok, req.edge_cache, [req.edge_pos])
             req.stream_row = (payload, scales)
         req.edge_pos += 1
+        device.telemetry.counters["stream_edge_steps"] += 1
+        self.send_row(device, req)
+
+    def send_row(self, device, req) -> None:
+        """One quantized row up the wire; retries re-enter here (the RTT
+        anchor keeps the FIRST send time, so a retried token honestly pays
+        the loss in its RTT)."""
+        if req.finished:
+            return
+        t = req.trace
+        now = device.loop.now
         nbytes = device.cost.stream_row_bytes(device.wire_mode, device.d_r)
         t.wire_bytes += nbytes
-        req.stream_t0 = now                      # RTT: row ready -> id back
+        if req.stream_t0 is None:
+            req.stream_t0 = now                  # RTT: row ready -> id back
         start, done = device.uplink.transfer(nbytes, now, uid=t.uid,
                                              tag="row")
         t.mobile_energy_mj += device.uplink.transfer_energy_mj(nbytes)
-        device.telemetry.counters["stream_edge_steps"] += 1
+        req.state = "await_token"
         device.loop.schedule_at(done,
-                                lambda: device.server.on_stream_row(req))
+                                lambda: device.server.on_stream_row(req),
+                                owner=device.uplink)
+        if device.injector is not None:
+            device.injector.arm(
+                req,
+                lambda: self.send_row(device.server.device_for(req), req),
+                "row")
 
     # -- cloud side ---------------------------------------------------------
     def start_cloud_decode(self, server, req) -> None:
@@ -179,6 +219,15 @@ class StreamedTransport(DecodeTransport):
         charged by the server per split group."""
         for req in batch:
             t = req.trace
+            if req.finished:
+                continue
+            if req.edge_pos <= req.cloud_served_upto:
+                # a retried row for a position already served: don't step
+                # the numerics again — resend the token it produced
+                server.telemetry.counters["fault_duplicate_rows"] += 1
+                tok, seq = req.last_sent
+                self.send_token(server, req, tok, seq=seq)
+                continue
             if server.bank is not None:
                 runner = server.bank.runner(t.split)
                 payload, scales = req.stream_row
@@ -188,28 +237,54 @@ class StreamedTransport(DecodeTransport):
             else:
                 tok = 0
             req.cloud_pos += 1
+            req.cloud_served_upto = req.edge_pos
             self.send_token(server, req, tok)
 
-    def send_token(self, server, req, tok) -> None:
+    def send_token(self, server, req, tok, seq=None) -> None:
         """One sampled id over the downlink to the mobile; on the last token
         the cloud's involvement ends here (slot + cache released before the
-        downlink completes)."""
+        downlink completes).  A fresh send (``seq=None``) assigns the next
+        sequence number; a resend reuses the original's, so the device can
+        drop duplicates.  Cloud-side bookkeeping (completion stamp, slot
+        release, cache drop) runs on the FRESH send only."""
+        if req.finished:
+            return
         t = req.trace
         now = server.loop.now
-        req.produced += 1
+        fresh = seq is None
+        if fresh:
+            req.sent_down += 1
+            seq = req.sent_down
+            req.last_sent = (int(tok), seq)
         wire = server.wire_for(req)
         t.downlink_bytes += TOKEN_BYTES
         start, done = wire.transfer_down(TOKEN_BYTES, now, uid=t.uid,
                                          tag="token")
         t.mobile_energy_mj += wire.downlink_energy_mj(TOKEN_BYTES)
-        if req.produced >= req.max_new_tokens:
+        if fresh and seq >= req.max_new_tokens:
             t.t_cloud_done = now
             if req.slot >= 0:
                 server.release_slot(req, now)
             req.cloud_cache = None
-        dev = server.devices[t.device]
+        # resolve the device at FIRE time: a migrated request's token lands
+        # on its new home
         server.loop.schedule_at(
-            done, lambda: self.token_at_device(dev, req, tok))
+            done,
+            lambda: self.token_at_device(server.device_for(req), req, tok,
+                                         seq),
+            owner=wire)
+        if server.injector is not None and fresh and seq == 1:
+            # the first token has no device-side row timer guarding it
+            server.injector.arm(
+                req, lambda: self.resend_last_token(server, req), "token")
+
+    def resend_last_token(self, server, req) -> None:
+        if req.finished or req.last_sent is None:
+            return
+        tok, seq = req.last_sent
+        self.send_token(server, req, tok, seq=seq)
+        server.injector.arm(
+            req, lambda: self.resend_last_token(server, req), "token")
 
 
 TRANSPORTS = {

@@ -75,6 +75,25 @@ class Wire:
         return cls(get_link(name), name=name, duplex=duplex,
                    window_s=window_s)
 
+    # ------------------------------------------------------------- faults
+    def handover(self, network: str) -> None:
+        """Swap the underlying link model mid-run (e.g. 3g → wifi).  Frames
+        already admitted keep their old completion times (they were cut at
+        the old rate); the goodput windows reset so the controller's next
+        decision sees the new link, not a blend."""
+        self.model = get_link(network)
+        self.name = network
+        self._recent_up.clear()
+        self._recent_down.clear()
+
+    def blackout(self, now: float, duration: float) -> None:
+        """Push both frontiers past a dark window: transfers admitted during
+        the blackout start after it lifts.  The fault layer separately
+        cancels deliveries already in flight (``cancel_owner``) — those
+        frames are lost, not delayed."""
+        self.free_at = max(self.free_at, now) + duration
+        self.down_free_at = max(self.down_free_at, now) + duration
+
     # ------------------------------------------------------------- durations
     def transfer_seconds(self, nbytes: float) -> float:
         return self.model.uplink_seconds(nbytes)

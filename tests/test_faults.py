@@ -1,0 +1,402 @@
+"""Fault injection, recovery, and mid-request migration (DESIGN.md sec. 15).
+
+Covers the chaos invariants the fault layer must hold:
+
+* a seeded random fault schedule always terminates with every request
+  accounted for (done | failed), breakdowns still sum to latency, and the
+  chaotic Chrome trace still validates;
+* mid-decode migration (device eviction, and a link handover) resumes the
+  streamed decode bitwise-identically to the uninterrupted run;
+* a recorded chaotic run replays byte-for-byte, fault schedule included
+  (arrival-trace-v2), and v1 traces stay readable;
+* a run with no faults configured is telemetry-byte-identical to one with
+  an *empty* schedule (the fault layer's observer effect is zero);
+* cloud outage degrades to edge-only fallback (or fails closed when
+  fallback is disabled), and arrivals reroute around evicted devices.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.profiler import GTX_1080TI, JETSON_TX2
+from repro.runtime.clock import EventLoop
+from repro.runtime.faults import (DecodeCheckpoint, FaultEvent, FaultSchedule,
+                                  RecoveryPolicy)
+from repro.runtime.simulator import (CellSpec, SimConfig, Simulation,
+                                     trace_arrivals, trace_faults)
+from repro.runtime.tracing import validate_chrome_trace
+
+
+def small_cfg(layers=4):
+    cfg = get_config("qwen3-8b").reduced()
+    return dataclasses.replace(cfg, num_layers=layers)
+
+
+def numerics_cfg(**kw):
+    """Tiny real-numerics streamed config: 1 request, 2 devices."""
+    base = dict(cfg=small_cfg(2), mode="split", wire_mode="int8",
+                transport="streamed", network="3g", num_devices=2,
+                num_requests=1, arrival_rate=20.0, prompt_len=8,
+                max_new_tokens=5, d_r=16, initial_split=1,
+                edge=JETSON_TX2, cloud=GTX_1080TI, max_concurrent=4,
+                seed=0, numerics=True)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+MIXED = (CellSpec(name="3g0", network="3g", num_devices=2, device="jetson"),
+         CellSpec(name="wifi1", network="wifi", num_devices=2,
+                  device="phone"))
+
+
+def topo_cfg(**kw):
+    """Timing-only 2-cell topology with adaptive controllers."""
+    base = dict(cfg=small_cfg(4), mode="split", wire_mode="int8",
+                transport="auto", topology=MIXED, num_requests=16,
+                arrival_rate=20.0, prompt_len=32, max_new_tokens=4,
+                d_r=16, initial_split=1, edge=JETSON_TX2, cloud=GTX_1080TI,
+                adapt=True, max_concurrent=8, seed=0, numerics=False)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------- schedule
+
+
+def test_fault_schedule_parse_and_roundtrip():
+    sched = FaultSchedule.parse(
+        "leave@0.05:2, join@0.2:3g0, handover@0.1:3g0>wifi, "
+        "blackout@0.15:wifi1+0.05, outage@0.3+0.2")
+    kinds = [e.kind for e in sched]
+    assert kinds == ["device_leave", "handover", "blackout", "device_join",
+                     "cloud_outage"]          # sorted by (t, kind)
+    assert sched.events[1].network == "wifi"
+    assert sched.events[2].duration == 0.05
+    # JSON roundtrip is exact (the arrival-trace-v2 header path)
+    again = FaultSchedule.from_obj(json.loads(json.dumps(sched.to_obj())))
+    assert again == sched
+
+    with pytest.raises(ValueError):
+        FaultSchedule.parse("handover@0.1:3g0")       # missing >network
+    with pytest.raises(ValueError):
+        FaultSchedule.parse("blackout@0.1:3g0")       # missing +duration
+    with pytest.raises(ValueError):
+        FaultSchedule.parse("explode@0.1")            # unknown kind
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="nope")
+
+
+def test_random_schedule_seeded():
+    a = FaultSchedule.random(3, cells=("3g0", "wifi1"), num_devices=4)
+    b = FaultSchedule.random(3, cells=("3g0", "wifi1"), num_devices=4)
+    c = FaultSchedule.random(4, cells=("3g0", "wifi1"), num_devices=4)
+    assert a == b
+    assert a != c
+    assert len(a) == 6
+    assert all(e.kind in ("device_leave", "device_join", "handover",
+                          "blackout", "cloud_outage") for e in a)
+
+
+# ------------------------------------------------------------------- clock
+
+
+def test_event_loop_cancel_handles():
+    loop = EventLoop()
+    fired = []
+    cancel = loop.schedule(1.0, lambda: fired.append("a"))
+    loop.schedule(2.0, lambda: fired.append("b"))
+    cancel()
+    cancel()                                   # idempotent
+    loop.run()
+    assert fired == ["b"]
+    assert loop.now == 2.0
+
+
+def test_event_loop_cancel_owner():
+    loop = EventLoop()
+    fired = []
+    owner1, owner2 = object(), object()
+    loop.schedule(1.0, lambda: fired.append("a"), owner=owner1)
+    loop.schedule(2.0, lambda: fired.append("b"), owner=owner1)
+    loop.schedule(3.0, lambda: fired.append("c"), owner=owner2)
+    assert loop.cancel_owner(owner1) == 2
+    assert loop.cancel_owner(owner1) == 0
+    loop.run()
+    assert fired == ["c"]
+
+
+# --------------------------------------------------------------- migration
+
+
+def _baseline_stream():
+    sim = Simulation(numerics_cfg())
+    tel = sim.run()
+    return list(sim.requests[0].engine_req.generated), tel.traces[0]
+
+
+def test_device_eviction_migrates_decode_bitwise():
+    """Evict the home device inside an edge decode step: the in-flight
+    streamed decode checkpoints (DecodeCheckpoint) and resumes on the
+    other device with a bitwise-identical token stream."""
+    toks0, trace0 = _baseline_stream()
+    # immediately after the first token lands the request is inside its
+    # edge decode step -> the checkpoint/restore path, not just re-homing
+    t_leave = trace0.t_first_token + 1e-6
+    sim = Simulation(numerics_cfg(faults=f"leave@{t_leave}:0"))
+    tel = sim.run()
+    assert list(sim.requests[0].engine_req.generated) == toks0
+    t = tel.traces[0]
+    assert t.outcome == "done"
+    assert t.migrations >= 1
+    assert tel.counters["fault_decode_migrations"] >= 1
+    assert sim.requests[0].home == 1          # resumed on the other device
+    assert t.t_done > trace0.t_done           # migration delay was paid
+
+
+def test_handover_mid_decode_bitwise():
+    """A 3g->wifi handover mid-stream re-links the wire under the request;
+    the token stream is unaffected (numerics never cross the link model)."""
+    toks0, trace0 = _baseline_stream()
+    t_mid = (trace0.t_first_token + trace0.t_done) / 2
+    sim = Simulation(numerics_cfg(faults=f"handover@{t_mid}:cell0>wifi"))
+    tel = sim.run()
+    assert list(sim.requests[0].engine_req.generated) == toks0
+    assert tel.traces[0].outcome == "done"
+    assert tel.counters["fault_handovers"] == 1
+    assert sim.cells[0].wire.name == "wifi"
+
+
+def test_double_eviction_remigrates():
+    """Evicting the migration target as well re-migrates from the same
+    checkpoint; with a third device alive the stream still completes
+    bitwise-identically."""
+    toks0, trace0 = _baseline_stream()
+    t1 = trace0.t_first_token + 1e-6
+    sim = Simulation(numerics_cfg(
+        num_devices=3, faults=f"leave@{t1}:0,leave@{t1 + 1e-6}:1"))
+    tel = sim.run()
+    assert list(sim.requests[0].engine_req.generated) == toks0
+    assert tel.traces[0].outcome == "done"
+    assert sim.requests[0].home == 2
+
+
+def test_eviction_with_no_target_fails_request():
+    toks0, trace0 = _baseline_stream()
+    t1 = trace0.t_first_token + 1e-6
+    sim = Simulation(numerics_cfg(
+        faults=f"leave@{t1}:0,leave@{t1 + 1e-6}:1"))
+    tel = sim.run()
+    t = tel.traces[0]
+    assert t.outcome == "failed"
+    assert t.failure == "device_lost"
+    assert abs(sum(t.breakdown().values()) - t.latency_s) < 1e-12
+
+
+def test_checkpoint_capture_restore_fields():
+    class _Req:
+        pass
+    req = _Req()
+    req.trace = type("T", (), {"uid": 7, "split": 1, "transport": "streamed",
+                               "prompt_len": 8})()
+    req.edge_pos, req.cloud_pos = 10, 9
+    req.produced, req.sent_down, req.cloud_served_upto = 3, 3, 9
+    req.last_token, req.last_sent = 42, (42, 3)
+    req.engine_req = None
+    req.edge_cache, req.cloud_cache, req.stream_row = "E", "C", "R"
+    ck = DecodeCheckpoint.capture(req)
+    req.edge_pos = req.cloud_pos = 0
+    req.edge_cache = req.cloud_cache = req.stream_row = None
+    ck.restore(req)
+    assert (req.edge_pos, req.cloud_pos) == (10, 9)
+    assert req.edge_cache == "E" and req.cloud_cache == "C"
+    other = _Req()
+    other.trace = type("T", (), {"uid": 8})()
+    with pytest.raises(AssertionError):
+        ck.restore(other)
+
+
+# -------------------------------------------------------- chaos invariants
+
+
+def test_chaos_sweep_invariants():
+    """Seeded random schedules over the 2-cell topology: every request
+    terminates with a valid outcome, breakdowns sum to latency, and the
+    chaotic Chrome trace still validates."""
+    for seed in range(4):
+        sched = FaultSchedule.random(seed, cells=("3g0", "wifi1"),
+                                     num_devices=4)
+        sim = Simulation(topo_cfg(faults=sched, seed=seed, trace=True))
+        tel = sim.run()
+        assert all(r.finished for r in sim.requests), f"seed {seed} hung"
+        assert len(tel.traces) == 16
+        for t in tel.traces:
+            assert t.outcome in ("done", "failed")
+            assert abs(sum(t.breakdown().values()) - t.latency_s) < 1e-12
+        s = tel.summary()
+        assert s["n_done"] + s["n_failed"] == 16
+        assert 0.0 <= s["availability_pct"] <= 100.0
+        validate_chrome_trace(json.loads(sim.tracer.to_json()))
+
+
+def test_explicit_chaos_migrations_and_retries():
+    sim = Simulation(topo_cfg(
+        faults="leave@0.02:1,handover@0.05:3g0>wifi,"
+               "blackout@0.08:wifi1+0.03,outage@0.12+0.1"))
+    tel = sim.run()
+    assert all(r.finished for r in sim.requests)
+    c = tel.counters
+    assert c["fault_device_leaves"] == 1
+    assert c["fault_handovers"] == 1
+    assert c["fault_blackouts"] == 1
+    assert c["fault_cloud_outages"] == 1
+    assert c["fault_retries"] >= 1            # outage dropped in-flight work
+    # the handover poked the cell's controller out-of-band
+    assert any(d.reason == "handover" for d in tel.decisions)
+
+
+def test_no_faults_is_byte_identical_to_empty_schedule():
+    """The fault layer's observer effect is zero: faults=None and an empty
+    FaultSchedule (injector active, nothing scheduled) must produce
+    byte-identical telemetry."""
+    t_none = Simulation(topo_cfg()).run().to_json()
+    t_empty = Simulation(topo_cfg(faults=FaultSchedule(()))).run().to_json()
+    assert t_none == t_empty
+
+
+def test_watchdog_fails_stuck_requests():
+    """A permanent total blackout of a cell's wire with retries disabled
+    would stall forever; the watchdog surfaces the stuck requests as
+    ``failed`` and Simulation.run terminates."""
+    pol = RecoveryPolicy(max_retries=0, edge_fallback=False,
+                         request_timeout_s=1.0, phase_timeout_s=5.0)
+    sim = Simulation(topo_cfg(faults="blackout@0.0:3g0+1e9",
+                              recovery=pol))
+    tel = sim.run()
+    assert all(r.finished for r in sim.requests)
+    failed = [t for t in tel.traces if t.outcome == "failed"]
+    assert failed, "watchdog never fired"
+    assert all(t.failure in ("request_timeout", "lost",
+                             "payload_retries_exhausted",
+                             "row_retries_exhausted")
+               for t in failed)
+
+
+# ------------------------------------------------------- outage + fallback
+
+
+def test_permanent_outage_edge_fallback():
+    tel = Simulation(topo_cfg(faults="outage@0.0+1e9")).run()
+    s = tel.summary()
+    assert s["n_done"] == 16 and s["n_failed"] == 0
+    assert s["n_fallback"] == 16
+    assert all(t.fallback == "edge" for t in tel.traces)
+    assert s["availability_pct"] == 100.0
+
+
+def test_permanent_outage_no_fallback_fails_closed():
+    tel = Simulation(topo_cfg(
+        faults="outage@0.0+1e9",
+        recovery=RecoveryPolicy(edge_fallback=False))).run()
+    s = tel.summary()
+    assert s["n_done"] == 0 and s["n_failed"] == 16
+    assert s["availability_pct"] == 0.0
+    for t in tel.traces:
+        assert abs(sum(t.breakdown().values()) - t.latency_s) < 1e-12
+
+
+# ------------------------------------------------------ churn (join/leave)
+
+
+def test_arrivals_reroute_around_evicted_device():
+    """Evict a device before traffic starts: its arrivals land on the
+    surviving device in the cell and every request completes."""
+    sim = Simulation(topo_cfg(faults="leave@0.0:0"))
+    tel = sim.run()
+    assert tel.summary()["availability_pct"] == 100.0
+    assert tel.counters["fault_rerouted_arrivals"] >= 1
+    assert all(r.home != 0 for r in sim.requests)
+
+
+def test_device_join_grows_fleet():
+    sim = Simulation(topo_cfg(faults="join@0.01:3g0"))
+    tel = sim.run()
+    assert len(sim.devices) == 5
+    joined = sim.devices[-1]
+    assert joined.cell == "3g0" and not joined.evicted
+    assert tel.summary()["availability_pct"] == 100.0
+
+
+# -------------------------------------------------- trace record / replay
+
+
+def test_chaos_record_replay_byte_identical(tmp_path):
+    """A recorded chaotic run replays byte-for-byte — telemetry JSON and
+    Chrome trace — with the fault schedule restored from the v2 header."""
+    path = str(tmp_path / "chaos.jsonl")
+    cfg = topo_cfg(faults="leave@0.02:1,outage@0.1+0.05", trace=True)
+    sim_a = Simulation(cfg)
+    sim_a.record_trace(path)
+    tel_a = sim_a.run()
+
+    faults = trace_faults(path)
+    assert faults is not None and len(faults) == 2
+    sim_b = Simulation(dataclasses.replace(
+        cfg, arrivals=trace_arrivals(path), faults=faults))
+    tel_b = sim_b.run()
+    assert tel_a.to_json() == tel_b.to_json()
+    assert sim_a.tracer.to_json() == sim_b.tracer.to_json()
+
+
+def test_empty_schedule_recorded_in_header(tmp_path):
+    """Recording a run with an *empty* schedule still writes the faults key
+    (so the replay re-enables the watchdog/fault layer)."""
+    path = str(tmp_path / "calm.jsonl")
+    sim = Simulation(topo_cfg(faults=FaultSchedule(())))
+    sim.record_trace(path)
+    faults = trace_faults(path)
+    assert faults is not None and len(faults) == 0
+
+
+def test_v1_trace_still_readable(tmp_path):
+    """A pre-fault (arrival-trace-v1) file replays fine: no faults key
+    means no injector."""
+    path = str(tmp_path / "v1.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"format": "arrival-trace-v1", "n": 2}) + "\n")
+        f.write(json.dumps({"cell": 0, "device": 0, "t": 0.01,
+                            "tokens": None}, sort_keys=True) + "\n")
+        f.write(json.dumps({"cell": 0, "device": 1, "t": 0.02,
+                            "tokens": None}, sort_keys=True) + "\n")
+    arrivals = trace_arrivals(path)
+    assert len(arrivals) == 2
+    assert trace_faults(path) is None
+    sim = Simulation(SimConfig(
+        cfg=small_cfg(4), mode="split", wire_mode="int8", network="3g",
+        num_devices=2, num_requests=2, prompt_len=16, max_new_tokens=1,
+        d_r=16, edge=JETSON_TX2, cloud=GTX_1080TI, numerics=False,
+        arrivals=arrivals))
+    tel = sim.run()
+    assert sim.injector is None
+    assert len(tel.traces) == 2
+
+
+# ----------------------------------------------------------- fault traces
+
+
+def test_fault_events_in_chrome_trace():
+    sim = Simulation(topo_cfg(faults="outage@0.05+0.05", trace=True))
+    sim.run()
+    doc = json.loads(sim.tracer.to_json())
+    faults = [e for e in doc["traceEvents"] if e.get("cat") == "fault"]
+    assert len(faults) == 1
+    assert faults[0]["args"]["kind"] == "cloud_outage"
+    validate_chrome_trace(doc)
+    # the validator rejects fault events without args.kind
+    bad = json.loads(sim.tracer.to_json())
+    for e in bad["traceEvents"]:
+        if e.get("cat") == "fault":
+            del e["args"]
+    with pytest.raises(ValueError, match="fault event missing args.kind"):
+        validate_chrome_trace(bad)
