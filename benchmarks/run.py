@@ -479,6 +479,47 @@ def bench_runtime():
           f"migrated={result['resilience']['n_migrated']} "
           f"retried={result['resilience']['n_retried']} "
           f"failed={result['resilience']['n_failed']}")
+    # decode pipelining: per-token microbatch rotation on the 2-pod mesh
+    # (serving/pipeline.make_decode_pipeline).  The CPU simulator cannot
+    # time real cross-pod overlap, so the tick cadence comes from the same
+    # profiled roofline the planner trusts: serial = edge + wire + cloud in
+    # sequence, pipelined = max of the three (>= 2 in-flight microbatches).
+    from repro.core.profiler import GTX_1080TI
+    from repro.core.wireless import NETWORKS
+    from repro.runtime.split_exec import CostModel
+
+    cost = CostModel(cfg, JETSON_TX2, GTX_1080TI)
+    dp_split, dp_dr, dp_net = 1, 16, "4g"
+    link_bps = NETWORKS[dp_net].uplink_mbps * 1e6
+    serial_s = cost.serial_decode_tick_s(dp_split, dp_dr, wire_mode="int8",
+                                         link_bps=link_bps)
+    pipe_s = cost.pipelined_decode_tick_s(dp_split, dp_dr, wire_mode="int8",
+                                          link_bps=link_bps)
+    row8 = cost.stream_row_bytes("int8", dp_dr)
+    row4 = cost.stream_row_bytes("int4", dp_dr)
+    scale_b = row8 - dp_dr                   # f32 scales, same either way
+    dp = {
+        "workload": {"split": dp_split, "d_r": dp_dr, "network": dp_net,
+                     "num_microbatches": 2},
+        "serial_tick_us": round(serial_s * 1e6, 2),
+        "pipelined_tick_us": round(pipe_s * 1e6, 2),
+        "tokens_per_s_serial": round(1.0 / serial_s, 1),
+        "tokens_per_s_pipelined": round(1.0 / pipe_s, 1),
+        "pipeline_speedup": round(serial_s / pipe_s, 3),
+        "wire_row_bytes_int8": row8,
+        "wire_row_bytes_int4": row4,
+        "int4_code_reduction": round((row8 - scale_b) / (row4 - scale_b), 2),
+        "int4_uplink_reduction": round(row8 / row4, 3),
+    }
+    assert dp["pipeline_speedup"] >= 1.5, dp
+    assert dp["int4_code_reduction"] == 2.0, dp
+    result["decode_pipeline"] = dp
+    print(f"runtime/decode_pipeline,0,"
+          f"serial={dp['serial_tick_us']:.1f}us "
+          f"pipelined={dp['pipelined_tick_us']:.1f}us "
+          f"speedup={dp['pipeline_speedup']:.2f}x "
+          f"int4_row={row4:.0f}B vs int8_row={row8:.0f}B "
+          f"({dp['int4_uplink_reduction']:.2f}x less)")
     us = (time.perf_counter() - t0) * 1e6
     print(f"runtime/topology,{us/15:.0f},"
           f"3g-jet=(s{topo['cells']['3g-jet']['final_split']},"

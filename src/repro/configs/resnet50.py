@@ -49,7 +49,7 @@ class ResNetConfig:
         """Wire bytes if offloading after residual block ``block`` (1-based)."""
         ch = channels if channels is not None else self.block_channels()[block - 1]
         sp = self.block_spatial()[block - 1]
-        return sp * sp * ch * bits // 8
+        return (sp * sp * ch * bits + 7) // 8      # ceil: sub-byte wires pack
 
     def with_butterfly(self, block: int, d_r: int, wire_bits: int = 8) -> "ResNetConfig":
         return replace(self, butterfly=ButterflyConfig(layer=block, d_r=d_r, wire_bits=wire_bits))

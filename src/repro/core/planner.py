@@ -232,6 +232,7 @@ def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
     "raw"     the boundary activation in model dtype (prior-work CI offload)
     "reduced" butterfly reduction, no wire quantization
     "int8"    the paper: int8 codes + per-row f32 scales
+    "int4"    beyond-paper: nibble-packed codes (2/byte) + f32 scales
     """
     from repro.core.quantization import wire_bytes
 
@@ -242,6 +243,8 @@ def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
         return float(batch * seq * d_r * act_bytes)
     if wire_mode == "int8":
         return float(wire_bytes((batch, seq, d_r), 8))
+    if wire_mode == "int4":
+        return float(wire_bytes((batch, seq, d_r), 4))
     raise ValueError(f"unknown wire_mode {wire_mode!r}")
 
 
@@ -258,7 +261,8 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                         downlink_bytes_per_s: Optional[float] = None,
                         downlink_energy_mj_per_byte: float = 0.0,
                         edge_mp: int = 1, cloud_mp: int = 1,
-                        slo_s: Optional[float] = None):
+                        slo_s: Optional[float] = None,
+                        pipeline_depth: int = 1):
     """One online iteration of Algorithm 1's selection phase.
 
     Unlike :func:`plan_transformer_split` this takes the *measured* state the
@@ -274,7 +278,11 @@ def select_split_online(cfg, seq: int, d_r: int, *,
     * ``streamed`` ships only the prefill codes, then pays one wire row up,
       one cloud turn and one id down per generated token — an RTT x tokens
       term against the observed link rates, with uplink bytes flat in the
-      prompt length.
+      prompt length.  With ``pipeline_depth >= 2`` (the decode-pipelined
+      mesh: >= 2 in-flight microbatches rotating through the (pod, model)
+      pipeline) the per-token cadence is the *slowest stage* — max(edge
+      step, wire row + id, cloud step) — instead of their sum, because the
+      edge computes microbatch k+1 while the cloud serves microbatch k.
 
     ``objective`` names a registered selection objective
     (:data:`SELECTION_OBJECTIVES`): ``latency``, ``energy``, or
@@ -333,8 +341,16 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                 t_up = base_wire / link_bps
                 rtt = t_edge_step + row_bytes / link_bps + t_cloud_step + \
                     token_down_s
+                if pipeline_depth >= 2:
+                    # pipelined decode: stages overlap across microbatches,
+                    # so steady state ticks at the slowest stage's rate
+                    cadence = max(t_edge_step, t_cloud_step,
+                                  row_bytes / link_bps + token_down_s)
+                else:
+                    cadence = rtt
                 edge_total = t_edge + (T - 1) * t_edge_step
-                lat = t_edge + t_up + t_cloud + token_down_s + (T - 1) * rtt
+                lat = t_edge + t_up + t_cloud + token_down_s + \
+                    (T - 1) * cadence
             else:
                 raise ValueError(f"unknown transport {tp!r}")
             rows.append({

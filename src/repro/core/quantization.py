@@ -54,9 +54,42 @@ def _fq_bwd(bits, _, g):
 fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
-def wire_bytes(shape: tuple, bits: int) -> int:
-    """Bytes on the wire for codes + per-row f32 scales."""
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-8, 7] two-per-byte along the last axis.
+
+    Layout: byte b holds code 2b in its low nibble and code 2b+1 in its
+    high nibble, so a ``(..., d)`` tensor packs to ``(..., d // 2)`` int8
+    (``d`` must be even).  The nibbles are two's-complement; sign recovery
+    happens in :func:`unpack_int4`."""
+    assert codes.shape[-1] % 2 == 0, \
+        f"int4 packing needs an even last axis, got {codes.shape}"
+    lo = codes[..., ::2] & 0x0F
+    hi = codes[..., 1::2] & 0x0F
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Invert :func:`pack_int4`: ``(..., d // 2)`` int8 -> ``(..., d)`` int8
+    codes in [-8, 7].  Sign-extend each nibble via an arithmetic shift of
+    the nibble parked in the high bits."""
+    lo = (packed.astype(jnp.int8) << 4) >> 4            # low nibble, signed
+    hi = packed.astype(jnp.int8) >> 4                   # high nibble, signed
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,))
+
+
+def scale_dtype_bytes(dtype=jnp.float32) -> int:
+    """Wire width of one per-row scale at its real dtype."""
+    return jnp.dtype(dtype).itemsize
+
+
+def wire_bytes(shape: tuple, bits: int, scale_dtype=jnp.float32) -> int:
+    """Bytes on the wire for bit-packed codes + per-row scales.
+
+    Codes pack to ``ceil(n * bits / 8)`` bytes (two int4 codes per byte,
+    no silent floor-to-zero for sub-byte wires); scales are counted at
+    their real dtype width, one per row."""
     import math
     n = math.prod(shape)
     rows = n // shape[-1]
-    return n * bits // 8 + rows * 4
+    return (n * bits + 7) // 8 + rows * scale_dtype_bytes(scale_dtype)

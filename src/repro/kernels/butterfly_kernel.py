@@ -63,6 +63,60 @@ def butterfly_reduce_quant_kernel(x, w_reduce, *, bits: int = 8,
     )(x, w_reduce)
 
 
+def _dequant_restore_norm_kernel(codes_ref, scales_ref, w_ref, nw_ref,
+                                 x_ref, h_ref, *, eps: float):
+    """Dequant + restore matmul + the first cloud layer's input RMSNorm in
+    one VMEM residency: the restored activation never round-trips HBM
+    before the layer consumes its normed copy.  The norm mirrors
+    models.common.rms_norm bitwise — including the round-trip through the
+    output dtype between restore and norm, so fused == unfused exactly."""
+    r = codes_ref[...].astype(jnp.float32) * scales_ref[...]
+    w = w_ref[...]
+    out = jax.lax.dot_general(
+        r, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    x = out.astype(x_ref.dtype)
+    x_ref[...] = x
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    h_ref[...] = (normed * (1.0 + nw_ref[...].astype(jnp.float32))
+                  ).astype(h_ref.dtype)
+
+
+def butterfly_dequant_restore_norm_kernel(codes, scales, w_restore, norm_w, *,
+                                          eps: float = 1e-6,
+                                          out_dtype=jnp.float32,
+                                          block_t: int = 256,
+                                          interpret: bool = False):
+    """codes: (T, d_r) int8, scales: (T, 1), w_restore: (d_r, d),
+    norm_w: (1, d) -> (x (T, d), h (T, d)): the restored activation and its
+    RMSNormed copy (the first cloud layer's norm1 input)."""
+    T, d_r = codes.shape
+    d = w_restore.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        functools.partial(_dequant_restore_norm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_r), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d_r, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, d), out_dtype),
+            jax.ShapeDtypeStruct((T, d), out_dtype),
+        ],
+        interpret=interpret,
+    )(codes, scales, w_restore, norm_w)
+
+
 def _dequant_restore_kernel(codes_ref, scales_ref, w_ref, out_ref):
     r = codes_ref[...].astype(jnp.float32) * scales_ref[...]
     w = w_ref[...]

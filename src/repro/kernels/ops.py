@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.butterfly_kernel import (
     butterfly_dequant_restore_kernel,
+    butterfly_dequant_restore_norm_kernel,
     butterfly_reduce_quant_kernel,
 )
 from repro.kernels.flash_attention import flash_attention_kernel
@@ -43,6 +44,14 @@ def _pad_to(x, multiple: int, axis: int):
 _FAST_PATH_ROWS = 8
 
 
+def decode_row_block(n_rows: int = 1, block_t: int = 256) -> int:
+    """The kernel block size the wrappers below pick for an ``n_rows``-row
+    call — exposed so hot-path callers (the split bank's compile cache) can
+    derive it once and fold it into their cache keys instead of re-deriving
+    it per call."""
+    return min(block_t, max(_FAST_PATH_ROWS, n_rows))
+
+
 def _reduce_quant_rows(xf, w_reduce, qmax: int):
     r = jax.lax.dot_general(xf, w_reduce, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -67,7 +76,7 @@ def butterfly_reduce_quant(x, w_reduce, *, bits: int = 8,
                                            2 ** (bits - 1) - 1)
         return (codes.reshape(*shape[:-1], d_r),
                 scales.reshape(*shape[:-1], 1))
-    block = min(block_t, max(8, T))
+    block = decode_row_block(T, block_t)
     xf, pad_t = _pad_to(xf, block, 0)
     codes, scales = butterfly_reduce_quant_kernel(
         xf, w_reduce, bits=bits, block_t=block, interpret=interpret_mode())
@@ -90,7 +99,7 @@ def butterfly_dequant_restore(codes, scales, w_restore, *,
         out = jax.lax.dot_general(r, w_restore, (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
         return out.astype(out_dtype).reshape(*shape[:-1], d)
-    block = min(block_t, max(8, T))
+    block = decode_row_block(T, block_t)
     cf, pad_t = _pad_to(cf, block, 0)
     sf, _ = _pad_to(sf, block, 0)
     out = butterfly_dequant_restore_kernel(
@@ -99,6 +108,40 @@ def butterfly_dequant_restore(codes, scales, w_restore, *,
     if pad_t:
         out = out[:T]
     return out.reshape(*shape[:-1], d)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "out_dtype", "block_t"))
+def butterfly_restore_norm(codes, scales, w_restore, norm_w, *,
+                           eps: float = 1e-6, out_dtype=jnp.float32,
+                           block_t: int = 256):
+    """Fused dequant + restore + first-cloud-layer RMSNorm.
+
+    codes: (..., d_r) int8, scales: (..., 1) -> (x (..., d), h (..., d))
+    where ``x`` is the restored boundary activation (the residual-stream
+    input) and ``h = rms_norm(x, norm_w)`` (the layer's norm1 output).
+    Bitwise equal to butterfly_dequant_restore followed by rms_norm."""
+    shape = codes.shape
+    d_r = shape[-1]
+    d = w_restore.shape[1]
+    cf = codes.reshape(-1, d_r)
+    sf = scales.reshape(-1, 1)
+    T = cf.shape[0]
+    if T <= _FAST_PATH_ROWS:                   # decode-row fast path
+        r = cf.astype(jnp.float32) * sf
+        out = jax.lax.dot_general(r, w_restore, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        x = out.astype(out_dtype)
+        h = ref.rms_norm_ref(x, norm_w, eps)
+        return (x.reshape(*shape[:-1], d), h.reshape(*shape[:-1], d))
+    block = decode_row_block(T, block_t)
+    cf, pad_t = _pad_to(cf, block, 0)
+    sf, _ = _pad_to(sf, block, 0)
+    x, h = butterfly_dequant_restore_norm_kernel(
+        cf, sf, w_restore, norm_w.reshape(1, d), eps=eps,
+        out_dtype=out_dtype, block_t=block, interpret=interpret_mode())
+    if pad_t:
+        x, h = x[:T], h[:T]
+    return x.reshape(*shape[:-1], d), h.reshape(*shape[:-1], d)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -117,7 +160,7 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_t: int = 256):
     shape = x.shape
     xf = x.reshape(-1, shape[-1])
     T = xf.shape[0]
-    block = min(block_t, max(8, T))
+    block = decode_row_block(T, block_t)
     xf, pad_t = _pad_to(xf, block, 0)
     out = rmsnorm_kernel(xf, w, eps=eps, block_t=block,
                          interpret=interpret_mode())
@@ -134,4 +177,5 @@ def rmsnorm_ref(x, w, eps: float = 1e-6):
 # reference aliases (oracles)
 butterfly_reduce_quant_ref = ref.butterfly_reduce_quant_ref
 butterfly_dequant_restore_ref = ref.butterfly_dequant_restore_ref
+butterfly_restore_norm_ref = ref.butterfly_restore_norm_ref
 flash_attention_ref = ref.flash_attention_ref

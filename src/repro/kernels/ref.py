@@ -24,6 +24,24 @@ def butterfly_dequant_restore_ref(codes, scales, w_restore, out_dtype=jnp.float3
     return (r @ w_restore.astype(jnp.float32)).astype(out_dtype)
 
 
+def rms_norm_ref(x, weight, eps: float = 1e-6):
+    """The model's RMSNorm (gemma-style 1+w weight), restated here so the
+    kernel oracles don't import the model package."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def butterfly_restore_norm_ref(codes, scales, w_restore, norm_w,
+                               eps: float = 1e-6, out_dtype=jnp.float32):
+    """Unfused oracle for the restore+norm kernel: dequant+restore, then the
+    model RMSNorm on the restored activation.  Returns (x, h)."""
+    x = butterfly_dequant_restore_ref(codes, scales, w_restore, out_dtype)
+    return x, rms_norm_ref(x, norm_w, eps)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True,
                         window: Optional[int] = None):
     """q: (B,S,N,hd), k/v: (B,T,K,hd) with N % K == 0 -> (B,S,N,hd) f32 math."""

@@ -70,7 +70,8 @@ def main():
                     help="override kv head count of the reduced arch")
     ap.add_argument("--mode", choices=("split", "cloud", "edge"),
                     default="split")
-    ap.add_argument("--wire-mode", choices=("raw", "reduced", "int8"),
+    ap.add_argument("--wire-mode",
+                    choices=("raw", "reduced", "int8", "int4"),
                     default="int8")
     ap.add_argument("--transport",
                     choices=("cache_handoff", "streamed", "auto"),

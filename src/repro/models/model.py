@@ -171,7 +171,7 @@ def _encode(params, built: BuiltModel, frames, pctx, use_kernel=False):
     sin = sinusoid_positions(frames.shape[1], cfg.d_model)
     x = frames.astype(_dtype(cfg)) + sin[None].astype(_dtype(cfg))
     for si, seg in enumerate(built.enc_segments):
-        x, _, _ = tfm.apply_segment(
+        x, _, _, _ = tfm.apply_segment(
             seg, params["encoder"]["segments"][si], x, cfg=cfg, pctx=pctx,
             mode="train", seg_cache=None, pos=None, causal=False,
             use_kernel=use_kernel)

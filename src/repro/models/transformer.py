@@ -209,14 +209,31 @@ def slice_stage_params(segments: Sequence[Segment], stage_params, lo: int,
 def apply_layer_range(segments: Sequence[Segment], stage_params, x, lo: int,
                       hi: int, *, cfg, pctx, mode, range_cache, pos,
                       enc_out=None, shared_params=None, use_kernel=False,
-                      causal=True):
+                      causal=True, first_h=None, overlap_psum=False):
     """Run flat layers [lo, hi) of a full stacked stage.  ``range_cache``
-    must be structured per :func:`range_segments` (see init_stage_cache)."""
+    must be structured per :func:`range_segments` (see init_stage_cache).
+    ``first_h`` feeds a pre-computed norm1 output (the fused restore+norm
+    kernel) to layer ``lo``; ``overlap_psum`` defers each dense layer's MLP
+    psum into the next layer (see :func:`apply_layer`)."""
     segs, params = slice_stage_params(segments, stage_params, lo, hi)
     return apply_stage(segs, params, x, cfg=cfg, pctx=pctx, mode=mode,
                        stage_cache=range_cache, pos=pos, enc_out=enc_out,
                        shared_params=shared_params, use_kernel=use_kernel,
-                       causal=causal)
+                       causal=causal, first_h=first_h,
+                       overlap_psum=overlap_psum)
+
+
+def first_layer_norm1(segments: Sequence[Segment], stage_params, lo: int = 0):
+    """The norm1 weight of flat layer ``lo`` of a stacked stage — what the
+    fused dequant+restore+norm kernel needs to pre-compute that layer's
+    input norm at the butterfly boundary."""
+    for span in _range_spans(segments, lo, lo + 1):
+        if span[0] == "peel":
+            _, si, rep, pos = span
+            return stage_params[si][pos]["norm1"][rep]
+        _, si, r0, _ = span
+        return stage_params[si][0]["norm1"][r0]
+    raise ValueError(f"layer {lo} out of range")
 
 
 # ---------------------------------------------------------------------------
@@ -408,8 +425,23 @@ def to_ring(kv: dict, window: int) -> dict:
 def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
                 pctx: ParallelContext, mode: str, cache, pos,
                 enc_out=None, shared_params=None, use_kernel: bool = False,
-                causal: bool = True):
-    """Returns (x, new_cache, aux_vec[2])."""
+                causal: bool = True, h_pre=None, pending=None,
+                defer_psum: bool = False):
+    """Returns (x, new_cache, aux_vec[2], pending_out).
+
+    ``h_pre`` short-circuits the input RMSNorm: a caller that already holds
+    ``rms_norm(x, norm1)`` (the fused dequant+restore+norm kernel at the
+    butterfly boundary) passes it here so the norm never runs twice.
+
+    ``pending``/``defer_psum`` implement psum overlap (opt-in): a dense
+    attn+mlp layer returns its MLP output as an *unreduced* per-rank
+    partial (``pending_out``) instead of psumming it in place; the next
+    layer folds ``x + model_psum(pending)`` in at its top, before norm1 —
+    the same value added one layer later, which frees the compiler to
+    overlap the model-axis collective with the boundary's independent work
+    (weight loads, cache indexing) instead of serializing on it.  Layers
+    with in-place reductions (MoE) or no model-axis partials return a zero
+    pending, so the carried structure is stable under scan."""
     aux = jnp.zeros((2,), jnp.float32)
     new_cache = None
     p = dict(lparams)
@@ -417,7 +449,11 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
         p["mixer"] = shared_params["mixer"]
         p["ffn"] = shared_params["ffn"]
 
-    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    if pending is not None:
+        x = x + model_psum(pending, pctx)
+    pending_out = jnp.zeros_like(x) if defer_psum else None
+
+    h = h_pre if h_pre is not None else rms_norm(x, p["norm1"], cfg.rms_eps)
     rope = not cfg.is_encdec          # whisper uses sinusoid embeds, no RoPE
     if ldef.mixer == "attn":
         if mode == "decode":
@@ -449,7 +485,11 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
             h2 = rms_norm(x, p["norm2"], cfg.rms_eps)
             if ldef.ffn == "mlp":
                 # w_down row-sharded under tensor parallelism -> partial out
-                x = x + model_psum(apply_mlp(p["ffn"], h2, cfg.act), pctx)
+                part = apply_mlp(p["ffn"], h2, cfg.act)
+                if defer_psum:
+                    pending_out = part
+                else:
+                    x = x + model_psum(part, pctx)
             else:
                 out, moe_aux = moe_lib.apply_moe(p["ffn"], h2, cfg=cfg,
                                                  pctx=pctx, act=cfg.act)
@@ -483,7 +523,7 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
         x = x + out
     else:
         raise ValueError(ldef.mixer)
-    return x, new_cache, aux
+    return x, new_cache, aux, pending_out
 
 
 # ---------------------------------------------------------------------------
@@ -491,44 +531,103 @@ def apply_layer(ldef: LayerDef, lparams, x, *, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
+def _apply_unit(seg: Segment, unit_params, unit_cache, x, aux_sum, pending, *,
+                cfg, pctx, mode, pos, enc_out, shared_params, use_kernel,
+                causal, first_h=None, defer_psum=False):
+    """One pass over a segment's repeat unit; shared by the scan body and
+    the peeled first repeat."""
+    new_caches = []
+    for i, ldef in enumerate(seg.unit):
+        c = None if unit_cache is None else unit_cache[i]
+        x, nc, aux, pending = apply_layer(
+            ldef, unit_params[i], x, cfg=cfg, pctx=pctx, mode=mode,
+            cache=c, pos=pos, enc_out=enc_out, shared_params=shared_params,
+            use_kernel=use_kernel, causal=causal,
+            h_pre=first_h if i == 0 else None, pending=pending,
+            defer_psum=defer_psum)
+        aux_sum = aux_sum + aux
+        new_caches.append(nc)
+    return x, aux_sum, pending, new_caches
+
+
 def apply_segment(seg: Segment, seg_params, x, *, cfg, pctx, mode, seg_cache,
                   pos, enc_out=None, shared_params=None, use_kernel=False,
-                  causal=True):
-    """seg_params: list per unit pos of stacked params; seg_cache likewise."""
+                  causal=True, first_h=None, overlap_psum=False,
+                  pending=None):
+    """seg_params: list per unit pos of stacked params; seg_cache likewise.
+
+    ``first_h`` is the fused restore+norm kernel's pre-normed input for the
+    segment's FIRST layer; when given, the first repeat is peeled out of the
+    scan (a scan body takes one trace for all repeats, so the norm skip
+    cannot live inside it) and the remaining repeats scan as usual.
+    ``overlap_psum`` threads a deferred MLP partial (``pending``) through
+    the repeats — see :func:`apply_layer`; the caller flushes the returned
+    pending."""
+    kw = dict(cfg=cfg, pctx=pctx, mode=mode, pos=pos, enc_out=enc_out,
+              shared_params=shared_params, use_kernel=use_kernel,
+              causal=causal, defer_psum=overlap_psum)
+    if overlap_psum and pending is None:
+        pending = jnp.zeros_like(x)
+    aux0 = jnp.zeros((2,), jnp.float32)
+    peel = first_h is not None
+    if peel:
+        p0 = jax.tree.map(lambda a: a[0], seg_params)
+        c0 = None if seg_cache is None else \
+            jax.tree.map(lambda a: a[0], seg_cache)
+        x, aux0, pending, first_caches = _apply_unit(
+            seg, p0, c0, x, aux0, pending, first_h=first_h, **kw)
+        if seg.repeats == 1:
+            new_cache = jax.tree.map(lambda a: a[None], first_caches)
+            return x, new_cache, aux0, pending
+        seg_params = jax.tree.map(lambda a: a[1:], seg_params)
+        seg_cache = None if seg_cache is None else \
+            jax.tree.map(lambda a: a[1:], seg_cache)
 
     def body(carry, xs):
-        xc, aux_sum = carry
+        if overlap_psum:
+            xc, pend, aux_sum = carry
+        else:
+            (xc, aux_sum), pend = carry, None
         unit_params, unit_cache = xs
-        new_caches = []
-        for i, ldef in enumerate(seg.unit):
-            c = None if unit_cache is None else unit_cache[i]
-            xc, nc, aux = apply_layer(
-                ldef, unit_params[i], xc, cfg=cfg, pctx=pctx, mode=mode,
-                cache=c, pos=pos, enc_out=enc_out, shared_params=shared_params,
-                use_kernel=use_kernel, causal=causal)
-            new_caches.append(nc)
-        return (xc, aux_sum + aux), new_caches
+        xc, aux_sum, pend, new_caches = _apply_unit(
+            seg, unit_params, unit_cache, xc, aux_sum, pend, **kw)
+        carry = (xc, pend, aux_sum) if overlap_psum else (xc, aux_sum)
+        return carry, new_caches
 
-    xs = (seg_params, seg_cache)
-    (x, aux), new_cache = jax.lax.scan(
-        body, (x, jnp.zeros((2,), jnp.float32)), xs, length=seg.repeats,
-        unroll=_scan_unroll(seg.repeats))
-    return x, new_cache, aux
+    reps = seg.repeats - 1 if peel else seg.repeats
+    init = (x, pending, aux0) if overlap_psum else (x, aux0)
+    carry, new_cache = jax.lax.scan(body, init, (seg_params, seg_cache),
+                                    length=reps, unroll=_scan_unroll(reps))
+    if overlap_psum:
+        x, pending, aux = carry
+    else:
+        (x, aux), pending = carry, None
+    if peel:
+        new_cache = jax.tree.map(
+            lambda f, r: jnp.concatenate([f[None], r], axis=0),
+            first_caches, new_cache)
+    return x, new_cache, aux, pending
 
 
 def apply_stage(segments: List[Segment], stage_params, x, *, cfg, pctx, mode,
                 stage_cache, pos, enc_out=None, shared_params=None,
-                use_kernel=False, causal=True):
+                use_kernel=False, causal=True, first_h=None,
+                overlap_psum=False):
     aux_total = jnp.zeros((2,), jnp.float32)
     new_caches = []
+    pending = None
     for si, seg in enumerate(segments):
         cache = None if stage_cache is None else stage_cache[si]
-        x, nc, aux = apply_segment(
+        x, nc, aux, pending = apply_segment(
             seg, stage_params[si], x, cfg=cfg, pctx=pctx, mode=mode,
             seg_cache=cache, pos=pos, enc_out=enc_out,
-            shared_params=shared_params, use_kernel=use_kernel, causal=causal)
+            shared_params=shared_params, use_kernel=use_kernel, causal=causal,
+            first_h=first_h if si == 0 else None,
+            overlap_psum=overlap_psum, pending=pending)
         new_caches.append(nc)
         aux_total = aux_total + aux
+    if pending is not None:
+        x = x + model_psum(pending, pctx)      # stage-end flush
     return x, new_caches, aux_total
 
 

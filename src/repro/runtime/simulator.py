@@ -270,7 +270,7 @@ def trace_arrivals(path: str) -> List[Arrival]:
 class SimConfig:
     cfg: object                              # ModelConfig (butterfly optional)
     mode: str = "split"                      # split | cloud | edge
-    wire_mode: str = "int8"                  # raw | reduced | int8
+    wire_mode: str = "int8"                  # raw | reduced | int8 | int4
     transport: str = "cache_handoff"         # cache_handoff | streamed | auto
     network: str = "3g"                      # 3g | 4g | wifi | inter_pod
     duplex: str = "split"                    # split | shared downlink FIFO

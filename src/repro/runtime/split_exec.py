@@ -124,8 +124,38 @@ class CostModel:
     def stream_row_bytes(self, wire_mode: str, d_r: int) -> float:
         """Per-token uplink bytes of the streamed transport: one boundary
         row in the wire format (int8 codes + f32 scale for the paper's
-        mode)."""
+        mode; "int4" nibble-packs two codes per byte, halving the code
+        bytes)."""
         return wire_mode_bytes(self.cfg, 1, d_r, wire_mode)
+
+    def serial_decode_tick_s(self, split: int, d_r: int, *,
+                             wire_mode: str = "int8",
+                             link_bps: Optional[float] = None,
+                             batch: int = 1, load: float = 0.0) -> float:
+        """Per-token latency of serial ping-pong decode: the edge step, the
+        wire row and the cloud step run strictly in sequence, so one pod
+        always idles."""
+        t = self.edge_decode_step_s(split, d_r) + \
+            self.cloud_decode_step_s(split, d_r, batch, load)
+        if link_bps:
+            t += self.stream_row_bytes(wire_mode, d_r) * 8.0 / link_bps
+        return t
+
+    def pipelined_decode_tick_s(self, split: int, d_r: int, *,
+                                wire_mode: str = "int8",
+                                link_bps: Optional[float] = None,
+                                batch: int = 1, load: float = 0.0) -> float:
+        """Steady-state per-token cadence of pipelined decode (>= 2
+        in-flight microbatches rotating through the 2-pod mesh): the edge
+        step for microbatch k+1, the wire row and the cloud step for
+        microbatch k all overlap, so the tick is the slowest part instead
+        of the sum."""
+        parts = [self.edge_decode_step_s(split, d_r),
+                 self.cloud_decode_step_s(split, d_r, batch, load)]
+        if link_bps:
+            parts.append(self.stream_row_bytes(wire_mode, d_r) * 8.0
+                         / link_bps)
+        return max(parts)
 
     def payload_bytes(self, mode: str, wire_mode: str, seq: int,
                       d_r: int, split: int, new_tokens: int = 1,
@@ -189,7 +219,9 @@ class SplitModelBank:
         from repro.models import transformer as tfm
 
         assert base_cfg.num_layers >= 2, "need >=2 layers to split"
-        assert wire_mode in ("raw", "reduced", "int8"), wire_mode
+        assert wire_mode in ("raw", "reduced", "int8", "int4"), wire_mode
+        if wire_mode == "int4":
+            assert d_r % 2 == 0, "int4 wire packs two codes per byte"
         if base_cfg.butterfly is not None:
             import dataclasses
             base_cfg = dataclasses.replace(base_cfg, butterfly=None)
@@ -219,9 +251,20 @@ class SplitModelBank:
         # batch rows are independent everywhere except MoE (shared capacity);
         # the actors also consult this before coalescing request numerics
         self._batch_bucket_ok = all(d.ffn != "moe" for d in self._defs)
-        # the fused Pallas codec emits int8 codes; wider wires (wire_bits=16
-        # -> int16 codes) take the eager quantize/dequantize path
-        self._kernel_wire_ok = wire_bits <= 8
+        # effective wire precision: "int4" quantizes to 4-bit codes (packed
+        # two per byte outside the kernel) regardless of the config default
+        self.wire_eff_bits = 4 if wire_mode == "int4" else wire_bits
+        # the fused Pallas codec emits int8 codes, which covers every
+        # sub-byte precision too (packing happens outside the kernel); only
+        # wider wires (wire_bits=16 -> int16 codes) take the eager path
+        self._kernel_wire_ok = self.wire_eff_bits <= 8
+        # decode-row kernel block size, derived ONCE from the wire format
+        # instead of per call, and folded into every compile-cache key so
+        # int4 and int8 rows (same (B, S) buckets, different packed widths)
+        # never alias a jitted step
+        from repro.kernels import ops as _kops
+        self.row_block = _kops.decode_row_block()
+        self._wire_sig = (wire_mode, self.wire_eff_bits, self.row_block)
 
         self._butterfly: Dict[int, dict] = {}
         # runner key: (split, edge_mp, cloud_mp); fn key: (kind, split, mp) —
@@ -231,7 +274,8 @@ class SplitModelBank:
         self._runners: Dict[Tuple[int, int, int], "SplitRunner"] = {}
         self._fns: Dict[Tuple[str, int, int], object] = {}  # compile cache
         self._cache_templates: Dict[Tuple[int, int, int, int], object] = {}
-        self.jit_cache_keys: set = set()  # (kind, split, mp, B_bkt, S_bkt)
+        # (kind, split, mp, B_bkt, S_bkt) + wire signature
+        self.jit_cache_keys: set = set()
         # opt-in wall-clock attribution (metrics.JitProfiler) + hit/miss
         # bookkeeping per padded-shape cache entry
         self.profiler = profiler
@@ -246,6 +290,13 @@ class SplitModelBank:
     @property
     def jit_cache_entries(self) -> int:
         return len(self.jit_cache_keys)
+
+    def cache_key(self, kind: str, split: int, mp: int, B: int,
+                  S: int) -> Tuple:
+        """Compile-cache key for one hot-path dispatch: the padded shape
+        bucket plus the wire signature (mode, effective bits, decode-row
+        kernel block) so differently-packed wires never alias."""
+        return (kind, split, mp, B, S) + self._wire_sig
 
     def timed_call(self, key: Tuple, fn, *args):
         """Run one hot-path dispatch, recording its compile-cache key (hit
@@ -316,7 +367,7 @@ class SplitModelBank:
             from repro.configs.base import ButterflyConfig
             key = jax.random.fold_in(jax.random.key(self.seed), split)
             bf = ButterflyConfig(layer=split, d_r=self.d_r,
-                                 wire_bits=self.wire_bits)
+                                 wire_bits=self.wire_eff_bits)
             self._butterfly[split], _ = init_butterfly(
                 key, self.base_cfg.d_model, bf, self._dt)
         return self._butterfly[split]
@@ -370,10 +421,26 @@ class SplitModelBank:
                                          self.base_cfg.num_layers)]
 
     # ------------------------------------------------- wire transforms (jit)
+    def _pack_wire(self, codes):
+        """Wire-format packing of quantized codes: int4 nibble-packs two
+        codes per byte (pack/unpack round-trips exactly, so the in-graph
+        numerics are unchanged); every other mode ships codes as-is."""
+        if self.wire_mode == "int4":
+            from repro.core.quantization import pack_int4
+            return pack_int4(codes)
+        return codes
+
+    def _unpack_wire(self, codes):
+        if self.wire_mode == "int4":
+            from repro.core.quantization import unpack_int4
+            return unpack_int4(codes)
+        return codes
+
     def _wire_ingraph(self, bf, x, *, use_kernel: bool):
         """The wire as the hosted model sees it, per wire_mode: raw ships the
         boundary tensor untouched, reduced projects down/up without
-        quantization, int8 round-trips the fused quantized codec."""
+        quantization, int8/int4 round-trip the fused quantized codec (int4
+        additionally round-trips the nibble packing)."""
         import jax.numpy as jnp
         from repro.core.quantization import dequantize, quantize
         if self.wire_mode == "raw":
@@ -383,16 +450,18 @@ class SplitModelBank:
         if use_kernel and self._kernel_wire_ok:
             from repro.kernels import ops as kops
             codes, scales = kops.butterfly_reduce_quant(
-                x, bf["w_reduce"], bits=self.wire_bits)
+                x, bf["w_reduce"], bits=self.wire_eff_bits)
+            codes = self._unpack_wire(self._pack_wire(codes))
             return kops.butterfly_dequant_restore(
                 codes, scales, bf["w_restore"], out_dtype=x.dtype)
         r = x @ bf["w_reduce"]
-        codes, scales = quantize(r, self.wire_bits)
+        codes, scales = quantize(r, self.wire_eff_bits)
+        codes = self._unpack_wire(self._pack_wire(codes))
         return dequantize(codes, scales, x.dtype) @ bf["w_restore"]
 
     # --------------------------------------------------- jitted core factory
     def _fn(self, kind: str, split: int, mp: int = 1):
-        key = (kind, split, mp)
+        key = (kind, split, mp) + self._wire_sig
         if key not in self._fns:
             self._fns[key] = getattr(self, f"_make_{kind}")(split, mp)
         return self._fns[key]
@@ -453,12 +522,13 @@ class SplitModelBank:
                 return r, jnp.zeros((*r.shape[:2], 1), jnp.float32), cache0
             if self._kernel_wire_ok:
                 codes, scales = kops.butterfly_reduce_quant(
-                    x, params["butterfly"]["w_reduce"], bits=self.wire_bits)
+                    x, params["butterfly"]["w_reduce"],
+                    bits=self.wire_eff_bits)
             else:
                 from repro.core.quantization import quantize
                 codes, scales = quantize(x @ params["butterfly"]["w_reduce"],
-                                         self.wire_bits)
-            return codes, scales, cache0
+                                         self.wire_eff_bits)
+            return self._pack_wire(codes), scales, cache0
 
         edge = self._mp_wrap(
             edge, mp, lambda: ((self._tp_specs(), P()),
@@ -480,11 +550,11 @@ class SplitModelBank:
                 x = payload @ params["butterfly"]["w_restore"]
             elif self._kernel_wire_ok:
                 x = kops.butterfly_dequant_restore(
-                    payload, scales, params["butterfly"]["w_restore"],
-                    out_dtype=dt)
+                    self._unpack_wire(payload), scales,
+                    params["butterfly"]["w_restore"], out_dtype=dt)
             else:
                 from repro.core.quantization import dequantize
-                x = dequantize(payload, scales, dt) @ \
+                x = dequantize(self._unpack_wire(payload), scales, dt) @ \
                     params["butterfly"]["w_restore"]
             x, cache1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
@@ -587,12 +657,13 @@ class SplitModelBank:
                 return r, jnp.zeros((*r.shape[:2], 1), jnp.float32), nc0
             if self._kernel_wire_ok:
                 codes, scales = kops.butterfly_reduce_quant(
-                    x, params["butterfly"]["w_reduce"], bits=self.wire_bits)
+                    x, params["butterfly"]["w_reduce"],
+                    bits=self.wire_eff_bits)
             else:
                 from repro.core.quantization import quantize
                 codes, scales = quantize(x @ params["butterfly"]["w_reduce"],
-                                         self.wire_bits)
-            return codes, scales, nc0
+                                         self.wire_eff_bits)
+            return self._pack_wire(codes), scales, nc0
 
         def specs():
             spec0 = self._cache_spec_tree(0, split)
@@ -619,11 +690,11 @@ class SplitModelBank:
                 x = payload @ params["butterfly"]["w_restore"]
             elif self._kernel_wire_ok:
                 x = kops.butterfly_dequant_restore(
-                    payload, scales, params["butterfly"]["w_restore"],
-                    out_dtype=dt)
+                    self._unpack_wire(payload), scales,
+                    params["butterfly"]["w_restore"], out_dtype=dt)
             else:
                 from repro.core.quantization import dequantize
-                x = dequantize(payload, scales, dt) @ \
+                x = dequantize(self._unpack_wire(payload), scales, dt) @ \
                     params["butterfly"]["w_restore"]
             x, nc1, _ = tfm.apply_layer_range(
                 segs, params["stages"][0], x, split, cfg.num_layers, cfg=cfg,
@@ -657,7 +728,7 @@ class SplitRunner:
         self.edge_mp = int(edge_mp)
         self.cloud_mp = int(cloud_mp)
         self.cfg = bank.base_cfg.with_butterfly(split, bank.d_r,
-                                                bank.wire_bits)
+                                                bank.wire_eff_bits)
         self.wire_mode = bank.wire_mode
         self.built = bank.built
         # shallow dict: backbone leaves are bank.params' leaves, not copies
@@ -675,7 +746,7 @@ class SplitRunner:
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
         out = bank.timed_call(
-            ("edge", self.split, self.edge_mp, Bb, Sb),
+            bank.cache_key("edge", self.split, self.edge_mp, Bb, Sb),
             bank._fn("edge", self.split, self.edge_mp),
             params, bank._pad_toks(toks, Bb, Sb))
         payload, scales, cache0 = out
@@ -695,7 +766,7 @@ class SplitRunner:
             payload = jnp.pad(payload, pad)
             scales = jnp.pad(jnp.asarray(scales), pad)
         logits, cache1 = bank.timed_call(
-            ("cloud", self.split, self.cloud_mp, Bb, Sb),
+            bank.cache_key("cloud", self.split, self.cloud_mp, Bb, Sb),
             bank._fn("cloud", self.split, self.cloud_mp),
             params, payload, scales, jnp.int32(S))
         return logits[:B], bank._slice_cache(cache1, 1, self.split, B, S)
@@ -711,7 +782,8 @@ class SplitRunner:
         bank = self.bank
         tok = jnp.asarray(tok, jnp.int32)
         out = bank.timed_call(
-            ("edge_step", self.split, self.edge_mp, tok.shape[0], 1),
+            bank.cache_key("edge_step", self.split, self.edge_mp,
+                           tok.shape[0], 1),
             bank._fn("edge_step", self.split, self.edge_mp),
             params, tok, cache0, jnp.asarray(pos, jnp.int32))
         return out
@@ -721,7 +793,9 @@ class SplitRunner:
         entry, with the bank's compile-cache bookkeeping (mirrors
         :meth:`edge_step`).  Returns ``(token, new_cache)``."""
         out = engine.stream_step(req, cache, payload, scales, pos)
-        self.bank.note_key(("cloud_step", self.split, self.cloud_mp, 1, 1))
+        self.bank.note_key(
+            self.bank.cache_key("cloud_step", self.split, self.cloud_mp,
+                                1, 1))
         return out
 
     def pad_decode_cache(self, cache, stage: int, length: int):
@@ -741,6 +815,53 @@ class SplitRunner:
 
         return jax.tree.map(pad, cache, template)
 
+    # ------------------------------------------------------ pipelined decode
+    def decode_pipeline(self, mesh, num_microbatches: int, prompt_len: int,
+                        microbatch: int, new_tokens: int, *,
+                        pipelined: bool = True, use_kernel: bool = False,
+                        overlap_psum: bool = False):
+        """Multi-token greedy decode over a ``(pod, ...)`` mesh through this
+        split: ``serving.pipeline.make_decode_pipeline``'s microbatch
+        rotation (or its serial ping-pong reference with
+        ``pipelined=False``) running the bank's shared backbone slices.
+        Returns ``run(tokens) -> (num_microbatches * microbatch,
+        new_tokens)`` greedy ids.  The compiled fn + split-view params are
+        cached in the bank's compile cache under the wire signature."""
+        import jax
+        bank = self.bank
+        assert bank.wire_mode in ("int8", "int4"), \
+            "decode pipeline wires quantized codes (int8/int4)"
+        key = ("decode_pipeline", self.split, id(mesh), num_microbatches,
+               prompt_len, microbatch, new_tokens, bool(pipelined),
+               bool(use_kernel), bool(overlap_psum)) + bank._wire_sig
+        if key not in bank._fns:
+            from repro.models.model import BuiltModel
+            from repro.serving import pipeline as spl
+            tfm = bank._tfm
+            segs = list(self.built.stages[0])
+            N = bank.base_cfg.num_layers
+            s0, p0 = tfm.slice_stage_params(segs, self.params["stages"][0],
+                                            0, self.split)
+            s1, p1 = tfm.slice_stage_params(segs, self.params["stages"][0],
+                                            self.split, N)
+            params = dict(self.params)
+            params["stages"] = [p0, p1]
+            built = BuiltModel(cfg=self.cfg, stages=(tuple(s0), tuple(s1)),
+                               enc_segments=(),
+                               long_mode=self.built.long_mode)
+            fn = spl.make_decode_pipeline(
+                built, mesh, num_microbatches, prompt_len, microbatch,
+                new_tokens, wire_mode=bank.wire_mode, pipelined=pipelined,
+                use_kernel=use_kernel, overlap_psum=overlap_psum)
+            bank._fns[key] = (jax.jit(fn), params)
+        fn, params = bank._fns[key]
+
+        def run(tokens):
+            bank.note_key(key)
+            return fn(params, tokens)
+
+        return run
+
     # ------------------------------------------------------------- engine glue
     def _engine_prefill(self, params, toks, mp: Optional[int] = None):
         import jax.numpy as jnp
@@ -750,7 +871,7 @@ class SplitRunner:
         B, S = toks.shape
         Bb, Sb = bank._buckets(B, S)
         logits, caches = bank.timed_call(
-            ("prefill", self.split, mp, Bb, Sb),
+            bank.cache_key("prefill", self.split, mp, Bb, Sb),
             bank._fn("prefill", self.split, mp),
             params, bank._pad_toks(toks, Bb, Sb), jnp.int32(S))
         return logits[:B], [bank._slice_cache(caches[0], 0, self.split, B, S),

@@ -81,6 +81,44 @@ def test_butterfly_wire_bits(wire_bits):
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+def test_int4_wire_accuracy_within_paper_bound():
+    """The paper's D_r selection criterion (<2% accuracy loss) applied to the
+    wire width: on a briefly-trained model, dropping the wire from int8 to
+    int4 moves held-out next-token accuracy by less than 2 points."""
+    import dataclasses
+    from repro.data import lm_batches
+    from repro.training import AdamWConfig, adamw_init, constant_schedule, \
+        make_train_step
+
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(), vocab_size=64)
+    cfg = cfg.with_butterfly(layer=1, d_r=32)
+    built = M.build(cfg)
+    params, _ = M.init_model(jax.random.key(0), built)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(built, AdamWConfig(lr=constant_schedule(3e-3))))
+    stream = iter(lm_batches(cfg.vocab_size, 32, 8, seed=7))
+    for _, raw in zip(range(60), stream):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, opt, _ = step(params, opt, batch)
+    held_out = [jnp.asarray(next(stream)["tokens"]) for _ in range(4)]
+
+    def accuracy(bits):
+        c = dataclasses.replace(
+            cfg, butterfly=dataclasses.replace(cfg.butterfly, wire_bits=bits))
+        b = M.build(c)
+        fwd = jax.jit(lambda p, t: M.forward_train(p, b, {"tokens": t})[0])
+        hits = tot = 0
+        for toks in held_out:
+            pred = jnp.argmax(fwd(params, toks)[:, :-1], -1)
+            hits += float((pred == toks[:, 1:]).sum())
+            tot += pred.size
+        return hits / tot
+
+    acc8, acc4 = accuracy(8), accuracy(4)
+    assert acc8 > 0.25, f"model failed to learn the chain ({acc8})"
+    assert abs(acc8 - acc4) < 0.02, (acc8, acc4)
+
+
 def test_butterfly_gradients_flow_to_both_stages():
     """End-to-end training through the wire: every stage gets gradient."""
     cfg = get_config("qwen3-8b").reduced().with_butterfly(layer=1, d_r=16)

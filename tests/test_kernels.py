@@ -37,6 +37,31 @@ def test_butterfly_dequant_restore(T, d, d_r):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("T,d,d_r", [(32, 128, 8),     # kernel grid path
+                                     (4, 128, 16)])    # decode-row fast path
+def test_butterfly_restore_norm_vs_ref(T, d, d_r):
+    """Fused dequant+restore+norm1 against the oracle AND against the
+    unfused composition it replaces (restore, then rms_norm)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(5), 4)
+    x = jax.random.normal(k1, (T, d), jnp.float32)
+    w = jax.random.normal(k2, (d, d_r), jnp.float32) * 0.05
+    wr = jax.random.normal(k3, (d_r, d), jnp.float32) * 0.05
+    nw = jax.random.normal(k4, (d,), jnp.float32) * 0.1
+    codes, scales = ref.butterfly_reduce_quant_ref(x, w)
+    xr, h = ops.butterfly_restore_norm(codes, scales, wr, nw, block_t=16)
+    xr_r, h_r = ref.butterfly_restore_norm_ref(codes, scales, wr, nw)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xr_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_r),
+                               rtol=1e-5, atol=1e-5)
+    unfused_x = ops.butterfly_dequant_restore(codes, scales, wr, block_t=16)
+    unfused_h = ops.rmsnorm_ref(unfused_x, nw)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(unfused_x),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(unfused_h),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_butterfly_roundtrip_error_bound():
     """|x - deq(quant(x))| <= scale/2 per element (symmetric rounding)."""
     x = jax.random.normal(jax.random.key(2), (64, 128), jnp.float32)

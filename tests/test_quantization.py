@@ -9,7 +9,8 @@ pytest.importorskip("hypothesis", reason="property suites need hypothesis "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.quantization import dequantize, fake_quant, quantize, wire_bytes
+from repro.core.quantization import (dequantize, fake_quant, pack_int4,
+                                     quantize, unpack_int4, wire_bytes)
 
 arrays = st.integers(1, 7).flatmap(
     lambda rows: st.integers(2, 33).flatmap(
@@ -62,6 +63,27 @@ def test_wire_bytes_accounting():
     # codes (int8) + f32 scale per row
     assert wire_bytes((4, 16, 32), 8) == 4 * 16 * 32 + 4 * 16 * 4
     assert wire_bytes((2, 8), 4) == 2 * 8 // 2 + 2 * 4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 7).flatmap(
+    lambda rows: st.integers(1, 16).flatmap(
+        lambda half: st.lists(st.integers(-8, 7),
+                              min_size=rows * half * 2,
+                              max_size=rows * half * 2)
+        .map(lambda v: np.asarray(v, np.int8).reshape(rows, half * 2)))))
+def test_pack_int4_roundtrip_exact(codes):
+    packed = pack_int4(jnp.asarray(codes))
+    assert packed.dtype == jnp.int8
+    assert packed.shape == (codes.shape[0], codes.shape[1] // 2)
+    back = unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+def test_int4_wire_halves_code_bytes():
+    shape = (4, 16, 32)
+    scales = 4 * 16 * 4                      # f32 scale per row either way
+    assert wire_bytes(shape, 8) - scales == 2 * (wire_bytes(shape, 4) - scales)
 
 
 def test_fake_quant_equals_quant_dequant():
