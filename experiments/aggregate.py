@@ -20,7 +20,7 @@ from collections import defaultdict
 # runtime-table job runs this script without PYTHONPATH=src, so it must not
 # import repro; tests/test_observability.py cross-checks the two stay in
 # sync).  None covers trajectory runs recorded before the field existed.
-KNOWN_SCHEMA_VERSIONS = (None, 2, 3)
+KNOWN_SCHEMA_VERSIONS = (None, 2, 3, 4)
 
 ARCH_ORDER = ["qwen3-14b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
               "pixtral-12b", "whisper-base", "gemma-7b", "gemma3-12b",
@@ -301,6 +301,21 @@ def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
               f"{res['baseline_p99_ms']:.2f}ms; "
               f"{res['n_migrated']} migrated, {res['n_retried']} retried, "
               f"{res['n_edge_fallback']} edge fallbacks")
+    gw = last.get("gateway")
+    if gw:
+        w = gw["workload"]
+        print(f"\n#### Gateway (SLO-classed shedding under a "
+              f"{w['n']//1000}k-request flash crowd)\n")
+        print(f"workload: {w['kind']} rate={w['rate']}/dev "
+              f"alpha={w['alpha']} burst={w['burst']}x over "
+              f"[{w['at']}, {w['at'] + w['dur']})s, "
+              f"{w['interactive']:.0%} interactive; "
+              f"policy: {w['policy']}")
+        print(f"interactive p99 {gw['interactive_p99_on_ms']:.1f}ms with "
+              f"shedding vs {gw['interactive_p99_off_ms']:.1f}ms without "
+              f"({gw['shed_interactive_p99_speedup']}x); "
+              f"{gw['n_shed']} shed, all batch "
+              f"({gw['n_shed_interactive']} interactive)")
     if len(runs) > 1:
         print("\n#### Perf trajectory (split int8 on 3g, per run)\n")
         for r in runs:

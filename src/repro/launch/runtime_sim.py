@@ -99,6 +99,20 @@ def main():
                     help="total requests across all cells")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="Poisson arrival rate per device (req/s)")
+    ap.add_argument("--workload", default=None, metavar="SPEC",
+                    help="workload spec '<kind>:key=value,...' (kinds: "
+                         "poisson | pareto | diurnal | flash; e.g. "
+                         "'pareto:alpha=1.5,rate=20,n=1000,"
+                         "interactive=0.25'); its rate/n/prompt_len "
+                         "override --rate/--requests/--seq "
+                         "(DESIGN.md section 17)")
+    ap.add_argument("--gateway", default=None, metavar="SPEC",
+                    help="serving-gateway policy: comma list of "
+                         "priority | shed | breaker | hedge[=delay_s] | "
+                         "autoscale | slo=<int_ms>/<batch_ms|inf> | "
+                         "reserve=<n> | cache=<n> | replicas=<n> | "
+                         "spinup=<s> (DESIGN.md section 17; autoscale "
+                         "needs --no-numerics)")
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--max-new-tokens", type=int, default=4)
     ap.add_argument("--d-r", type=int, default=16)
@@ -212,6 +226,7 @@ def main():
         objective=args.objective, slo_ms=args.slo_ms,
         max_concurrent=args.max_concurrent, seed=args.seed,
         numerics=not args.no_numerics, arrivals=arrivals, faults=faults,
+        workload=args.workload, gateway=args.gateway,
         trace=bool(args.trace_out), metrics=bool(args.metrics_out),
         metrics_interval_s=args.metrics_interval,
         profile_jit=args.profile_jit)
@@ -278,6 +293,19 @@ def main():
             extra = f" -> {ev.network}" if ev.network else ""
             extra += f" for {ev.duration*1e3:.0f} ms" if ev.duration else ""
             print(f"  {ev.t:7.3f}s  {ev.kind:<13} {tgt}{extra}")
+    if sim.gateway is not None:
+        c = tel.counters
+        print(f"\ngateway ({args.gateway}): done {s['n_done']:.0f}  "
+              f"failed {s['n_failed']:.0f}  shed {s['n_shed']:.0f}  "
+              f"hedged {s['n_hedged']:.0f}  "
+              f"cache hits {c['gateway_cache_hits']:.0f}  "
+              f"breaker opens {c['gateway_breaker_opens']:.0f}  "
+              f"scale-ups {c['gateway_scale_ups']:.0f}")
+        for cls, row in tel.class_summary().items():
+            print(f"  [{cls:<11}] n={row['n_requests']:.0f} "
+                  f"done {row['n_done']:.0f} shed {row['n_shed']:.0f}  "
+                  f"p50 {row['latency_p50_ms']:.2f} ms  "
+                  f"p99 {row['latency_p99_ms']:.2f} ms")
     if tel.decisions:
         print("\ncontroller decisions (t, cell, cloud_load, split, "
               "transport):")

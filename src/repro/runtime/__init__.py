@@ -16,29 +16,53 @@ static pieces:
   actors.py      edge-device fleets and the cloud continuous-batching server
   controller.py  per-cell adaptive split + transport control (pluggable
                  objectives: latency / energy / energy_under_slo)
-  simulator.py   multi-cell topologies (CellSpec grammar), arrival-trace
+  gateway.py     serving gateway: SLO classes, admission control, circuit
+                 breakers, hedged retries, response cache, autoscaling
+  simulator.py   multi-cell topologies (CellSpec grammar), workload specs
+                 (Poisson/Pareto/diurnal/flash), arrival-trace
                  record/replay, and the runnable simulation
 
 Entry points: ``repro.launch.runtime_sim`` (CLI) and
 ``benchmarks.run runtime`` (JSON comparison vs cloud-only offload).
+
+The package surface below is THE public API (audited: every name is
+re-documented in DESIGN.md section 17 and tests/test_workload.py asserts
+the two lists match); anything not exported here is an internal detail
+that may change between PRs.
 """
+from repro.runtime.actors import CloudServer, CloudSpec, EdgeDevice
 from repro.runtime.clock import EventLoop
 from repro.runtime.controller import AdaptiveSplitController
-from repro.runtime.metrics import (CountersView, JitProfiler, MetricsRegistry,
+from repro.runtime.gateway import (CircuitBreaker, Gateway, GatewayPolicy,
+                                   JobQueue, ResponseCache)
+from repro.runtime.metrics import (JitProfiler, MetricsRegistry,
                                    MetricsSampler, read_metrics_jsonl)
 from repro.runtime.simulator import (Arrival, CellSpec, SimConfig, Simulation,
-                                     Topology, parse_topology,
+                                     Topology, WorkloadSpec, build_arrivals,
+                                     diurnal_arrivals, flash_arrivals,
+                                     pareto_arrivals, parse_topology,
                                      poisson_arrivals, record_arrivals,
-                                     trace_arrivals)
+                                     run_sim, trace_arrivals)
 from repro.runtime.telemetry import RequestTrace, Telemetry
-from repro.runtime.tracing import (NULL_TRACER, Tracer, validate_chrome_trace)
+from repro.runtime.tracing import Tracer, validate_chrome_trace
 from repro.runtime.transports import DecodeTransport, get_transport
 from repro.runtime.wire import Wire
 
-__all__ = ["EventLoop", "AdaptiveSplitController", "Arrival", "CellSpec",
-           "SimConfig", "Simulation", "Topology", "RequestTrace", "Telemetry",
-           "Wire", "DecodeTransport", "get_transport", "parse_topology",
-           "poisson_arrivals", "record_arrivals", "trace_arrivals",
-           "Tracer", "NULL_TRACER", "validate_chrome_trace",
-           "MetricsRegistry", "MetricsSampler", "CountersView", "JitProfiler",
-           "read_metrics_jsonl"]
+__all__ = [
+    # simulation driver + config
+    "SimConfig", "Simulation", "run_sim",
+    # topology + workload
+    "Arrival", "CellSpec", "Topology", "parse_topology", "WorkloadSpec",
+    "build_arrivals", "poisson_arrivals", "pareto_arrivals",
+    "diurnal_arrivals", "flash_arrivals", "record_arrivals",
+    "trace_arrivals",
+    # actors + gateway
+    "CloudServer", "CloudSpec", "EdgeDevice", "Gateway", "GatewayPolicy",
+    "JobQueue", "CircuitBreaker", "ResponseCache",
+    # control + transport + wire
+    "AdaptiveSplitController", "DecodeTransport", "get_transport", "Wire",
+    # clock + observability
+    "EventLoop", "RequestTrace", "Telemetry", "Tracer",
+    "validate_chrome_trace", "MetricsRegistry", "MetricsSampler",
+    "JitProfiler", "read_metrics_jsonl",
+]

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.costs import TOKEN_BYTES
 from repro.runtime.clock import EventLoop
+from repro.runtime.gateway import JobQueue
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
 from repro.runtime.tracing import NULL_TRACER
@@ -71,6 +72,9 @@ class SimRequest:
     cloud_served_upto: int = 0                # highest edge_pos served (dedupe)
     last_sent: Optional[tuple] = None         # (tok, seq) for resends
     checkpoint: object = None                 # DecodeCheckpoint mid-migration
+    # gateway response cache: the generated ids a cache hit replayed
+    # (byte-identical to the original computation — asserted in tests)
+    cached_ids: Optional[tuple] = None
 
     @property
     def uid(self) -> int:
@@ -189,6 +193,9 @@ class EdgeDevice:
         req.state = "uplink"
         self.loop.schedule_at(done, lambda: self.server.on_payload(req),
                               owner=self.uplink)
+        gw = self.server.gateway
+        if first and gw is not None and gw.wants_hedge(req):
+            gw.arm_hedge(self, req)
         if self.injector is not None:
             self.injector.arm(
                 req, lambda: self.server.device_for(req).send_payload(req),
@@ -326,33 +333,51 @@ class EdgeDevice:
         return self._local_engine
 
 
+@dataclass(frozen=True)
+class CloudSpec:
+    """What a cloud deployment IS (bank, cost model, limits) — as opposed
+    to how it is wired into a particular simulation (loop, telemetry,
+    wire, callbacks), which stays keyword arguments on
+    :class:`CloudServer`.  Frozen: a spec can be shared and compared
+    across runs."""
+    cost: CostModel
+    bank: Optional[SplitModelBank] = None
+    mode: str = "split"                       # split | cloud | edge
+    d_r: int = 16
+    max_concurrent: int = 8                   # slot-pool size per replica
+    background_load: Optional[Callable[[float], float]] = None
+    engine_seed: int = 0
+    max_len: int = 256
+    numerics_split: int = 1
+
+
 class CloudServer:
     """Serial accelerator + slot pool running continuous batching."""
 
-    def __init__(self, *, loop: EventLoop, cost: CostModel,
-                 bank: Optional[SplitModelBank], mode: str, d_r: int,
-                 telemetry: Telemetry, max_concurrent: int = 8,
-                 background_load: Optional[Callable[[float], float]] = None,
-                 engine_seed: int = 0, max_len: int = 256,
-                 on_done: Optional[Callable[[SimRequest], None]] = None,
-                 numerics_split: int = 1, wire: Optional[Wire] = None):
-        self.numerics_split = numerics_split
+    def __init__(self, spec: CloudSpec, *, loop: EventLoop,
+                 telemetry: Telemetry,
+                 wire: Optional[Wire] = None,
+                 on_done: Optional[Callable[[SimRequest], None]] = None):
+        self.spec = spec
+        self.numerics_split = spec.numerics_split
         self.loop = loop
-        self.cost = cost
-        self.bank = bank
-        self.mode = mode
-        self.d_r = d_r
+        self.cost = spec.cost
+        self.bank = spec.bank
+        self.mode = spec.mode
+        self.d_r = spec.d_r
         self.telemetry = telemetry
-        self.max_concurrent = max_concurrent
-        self.background_load = background_load or (lambda t: 0.0)
-        self.max_len = max_len
-        self.engine_seed = engine_seed
+        self.max_concurrent = spec.max_concurrent
+        self.background_load = spec.background_load or (lambda t: 0.0)
+        self.max_len = spec.max_len
+        self.engine_seed = spec.engine_seed
         self.on_done = on_done
         self.wire = wire                          # downlink fallback (1 cell)
         self.devices: List[object] = []           # filled by the simulator
-        self.pending: deque[SimRequest] = deque()
+        # a FIFO JobQueue is deque-identical; an attached Gateway swaps in
+        # its priority queue (runtime/gateway.py)
+        self.pending: JobQueue = JobQueue()
         self.stream_ready: deque[SimRequest] = deque()  # rows awaiting a turn
-        self.slots: List[Optional[SimRequest]] = [None] * max_concurrent
+        self.slots: List[Optional[SimRequest]] = [None] * spec.max_concurrent
         self.slot_history: List[tuple] = []       # (uid, slot) admissions
         self._engines: Dict[int, object] = {}     # split -> ServingEngine
         self._virtual_left: Dict[int, int] = {}   # uid -> decode steps left
@@ -362,6 +387,11 @@ class CloudServer:
         self.peak_active = 0
         self.tracer = NULL_TRACER                 # swapped in by the simulator
         self.injector = None                      # FaultInjector when faults on
+        self.gateway = None                       # Gateway when a policy is set
+        # autoscaled replica count: each replica contributes one
+        # max_concurrent slot pool and one accelerator's worth of parallel
+        # service capacity (the gateway's autoscaler mutates this)
+        self.replicas = 1
         # cloud-outage window: ingress (payloads, rows) is dropped while
         # now < outage_until; work already admitted finishes decoding —
         # the modeled outage is an ingress blackout, not engine surgery
@@ -387,7 +417,9 @@ class CloudServer:
         if now < self.outage_until:
             return 0.99
         bg = min(max(self.background_load(now), 0.0), 0.99)
-        occ = self.num_active / self.max_concurrent
+        # the denominator is the LIVE slot pool: an autoscaled replica
+        # coming online visibly drops the load the controllers observe
+        occ = self.num_active / len(self.slots)
         return min(1.0 - (1.0 - bg) * (1.0 - occ), 0.99)
 
     def device_for(self, req: SimRequest) -> Optional[object]:
@@ -410,11 +442,21 @@ class CloudServer:
         if self.injector is not None:
             if self.loop.now < self.outage_until:
                 self.telemetry.counters["fault_outage_dropped_payloads"] += 1
+                if self.gateway is not None:
+                    # the breaker counts dropped ingress as a health signal
+                    self.gateway.note_dropped_payload(req.trace.cell)
                 return
             if req.slot >= 0 or req in self.pending:
                 # a spurious retry: the original made it after all
                 self.telemetry.counters["fault_duplicate_payloads"] += 1
                 return
+        elif self.gateway is not None and \
+                (req.slot >= 0 or req in self.pending):
+            # the losing copy of a hedged send
+            self.telemetry.counters["gateway_duplicate_payloads"] += 1
+            return
+        if self.gateway is not None and not self.gateway.admit(req):
+            return            # shed, or served from the response cache
         req.state = "cloud"
         self.pending.append(req)
         self._kick()
@@ -467,6 +509,12 @@ class CloudServer:
             slot = self._free_slot()
             if slot < 0:
                 break
+            if self.gateway is not None and not self.gateway.may_start(
+                    self.pending.peek(),
+                    sum(1 for s in self.slots if s is None)):
+                # head is batch-class and would eat a reserved slot; the
+                # priority queue guarantees nothing interactive is behind it
+                break
             req = self.pending.popleft()
             start = self._admit(req, slot, start)
             admitted += 1
@@ -510,7 +558,11 @@ class CloudServer:
                                                     "split": t.split,
                                                     "slot": slot})
         self.loop.schedule_at(start + dur, lambda: self._prefill_done(req))
-        return start + dur
+        # with R autoscaled replicas, R prefills run concurrently in
+        # aggregate: each request still takes its full duration, but the
+        # serial frontier the NEXT admission queues behind advances at R
+        # times the rate (replicas == 1 reduces to the serial accelerator)
+        return start + dur / self.replicas
 
     def _cloud_numerics(self, req: SimRequest) -> tuple:
         """(last logits row, cache1 slice, cache0) for ``req``; the first
@@ -557,6 +609,7 @@ class CloudServer:
         for split in sorted({r.trace.split for r in batch}):
             k = sum(1 for r in batch if r.trace.split == split)
             dur += self.cost.cloud_decode_step_s(split, self.d_r, k, load)
+        dur /= self.replicas
         self.telemetry.counters["stream_cloud_turns"] += 1
         self.telemetry.counters["stream_rows"] += len(batch)
         self.tracer.complete("cloud/accel", "stream_turn", now, now + dur,
@@ -570,7 +623,9 @@ class CloudServer:
     def _decode_step(self, now: float) -> None:
         batch = self.num_decoding
         load = min(max(self.background_load(now), 0.0), 0.99)
-        dur = self.cost.decode_step_s(batch, where="cloud", load=load)
+        # replicas split the decode batch: each runs its share in parallel
+        dur = self.cost.decode_step_s(-(-batch // self.replicas),
+                                      where="cloud", load=load)
         self.tracer.complete("cloud/accel", "decode_turn", now, now + dur,
                              cat="cloud", args={"batch": batch})
         self.loop.schedule(dur, self._decode_done)
@@ -590,8 +645,15 @@ class CloudServer:
                     self._complete(req)
         else:
             for req in handoff:
-                self._virtual_left[req.uid] -= 1
-                if self._virtual_left[req.uid] <= 0:
+                left = self._virtual_left.get(req.uid)
+                if left is None:
+                    # replicas > 1: the aggregate prefill frontier advances
+                    # faster than each request's own prefill, so a slot can
+                    # sit in the pool before its decode state exists — it
+                    # joins the batch on the turn after its prefill lands
+                    continue
+                self._virtual_left[req.uid] = left - 1
+                if left <= 1:
                     self._complete(req)
         self.loop.schedule(0.0, self._service)
 
@@ -662,5 +724,9 @@ class CloudServer:
             return
         req.finished = True
         req.state = "done"
+        if self.gateway is not None:
+            # every terminal outcome funnels through here: feed the
+            # breaker/EWMA/cache health signals
+            self.gateway.note_outcome(req)
         if self.on_done is not None:
             self.on_done(req)

@@ -45,9 +45,11 @@ import numpy as np
 
 from repro.core.profiler import (GTX_1080TI, JETSON_TX2, HardwareProfile,
                                  get_device_class)
-from repro.runtime.actors import CloudServer, EdgeDevice, SimRequest
+from repro.runtime.actors import (CloudServer, CloudSpec, EdgeDevice,
+                                  SimRequest)
 from repro.runtime.clock import EventLoop
 from repro.runtime.faults import FaultInjector, FaultSchedule, RecoveryPolicy
+from repro.runtime.gateway import Gateway, GatewayPolicy
 from repro.runtime.metrics import JitProfiler, MetricsRegistry, MetricsSampler
 from repro.runtime.split_exec import CostModel, SplitModelBank
 from repro.runtime.telemetry import RequestTrace, Telemetry
@@ -169,6 +171,7 @@ class Arrival:
     t: float
     tokens: Optional[np.ndarray] = None      # prompt ids (numerics mode)
     cell: int = 0
+    slo: str = "interactive"                 # SLO class (gateway.SLO_CLASSES)
 
 
 def poisson_arrivals(*, num_devices: int, num_requests: int,
@@ -202,11 +205,205 @@ def poisson_arrivals(*, num_devices: int, num_requests: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# workload specs: the arrival-trace API
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """What traffic hits the fleet — THE arrival API (DESIGN.md section
+    17).  ``SimConfig(workload=...)`` takes a spec or its string grammar
+    and overrides the legacy ``num_requests``/``arrival_rate``/
+    ``prompt_len`` fields, which keep working as a deprecation shim that
+    maps onto ``WorkloadSpec(kind="poisson")`` — old-style configs build
+    the identical arrival list.  Grammar: ``"<kind>:key=value,..."``, e.g.
+
+      "poisson:rate=20,n=16"
+      "pareto:alpha=1.5,rate=20,n=100000,interactive=0.25"
+      "diurnal:rate=20,n=500,period=2.0,depth=0.8"
+      "flash:rate=10,n=1000,at=0.2,dur=0.3,burst=20,alpha=1.5"
+
+    ``interactive`` splits requests between the gateway's SLO classes; the
+    class stream is drawn from its own namespaced rng, so turning it on
+    never perturbs arrival times or prompt tokens."""
+    kind: str = "poisson"            # poisson | pareto | diurnal | flash
+    rate: Optional[float] = None     # per-device mean arrivals/s
+    n: Optional[int] = None          # total requests across the topology
+    prompt_len: Optional[int] = None
+    interactive: float = 1.0         # fraction assigned the interactive class
+    alpha: Optional[float] = None    # Pareto tail index (->1 = heavier);
+    #                                  None = exponential gaps (pareto: 1.5)
+    period_s: float = 1.0            # diurnal cycle length
+    depth: float = 0.8               # diurnal trough is rate*(1-depth)
+    at: float = 0.2                  # flash-crowd onset (s)
+    dur: float = 0.2                 # flash-crowd duration (s)
+    burst: float = 10.0              # flash-crowd rate multiplier
+
+    KINDS = ("poisson", "pareto", "diurnal", "flash")
+
+    def __post_init__(self):
+        assert self.kind in self.KINDS, \
+            f"unknown workload kind {self.kind!r} (one of {self.KINDS})"
+        assert 0.0 <= self.interactive <= 1.0, self.interactive
+        assert self.alpha is None or self.alpha > 1.0, \
+            "Pareto gaps need alpha > 1 for a finite mean inter-arrival"
+        assert 0.0 <= self.depth < 1.0, self.depth
+        assert self.burst >= 1.0, self.burst
+
+    @classmethod
+    def parse(cls, spec: str) -> "WorkloadSpec":
+        kind, _, rest = spec.partition(":")
+        floats = {"rate": "rate", "interactive": "interactive",
+                  "alpha": "alpha", "period": "period_s", "depth": "depth",
+                  "at": "at", "dur": "dur", "burst": "burst"}
+        ints = {"n": "n", "prompt_len": "prompt_len"}
+        kw = {}
+        for part in (p.strip() for p in rest.split(",") if p.strip()):
+            key, eq, val = part.partition("=")
+            if eq and key in floats:
+                kw[floats[key]] = float(val)
+            elif eq and key in ints:
+                kw[ints[key]] = int(val)
+            else:
+                raise ValueError(
+                    f"bad workload token {part!r}: expected "
+                    f"<kind>:key=value,... with keys "
+                    f"{sorted(floats) + sorted(ints)}")
+        return cls(kind=kind.strip(), **kw)
+
+
+def _assign_classes(arrivals: List[Arrival], interactive: float,
+                    seed: int, device_offset: int) -> List[Arrival]:
+    """SLO classes from a namespaced rng stream SEPARATE from the
+    inter-arrival/token draws, so a class split never changes the trace
+    timing or prompts (the legacy byte-identity contract)."""
+    if interactive >= 1.0:
+        return arrivals
+    rng = np.random.default_rng([0x57, seed, device_offset])
+    return [replace(a, slo="interactive" if rng.random() < interactive
+                    else "batch") for a in arrivals]
+
+
+def _modulated_arrivals(rate_of: Callable[[float], float], *,
+                        num_devices: int, num_requests: int,
+                        prompt_len: int, vocab_size: Optional[int] = None,
+                        seed: int = 0, device_offset: int = 0, cell: int = 0,
+                        alpha: Optional[float] = None) -> List[Arrival]:
+    """Shared non-homogeneous builder: per-device unit-mean gap draws
+    rescaled by the instantaneous rate.  ``alpha`` swaps the base draw
+    from exponential to Pareto(alpha) with the same unit mean — heavy
+    tails under any rate envelope.  Same per-device rng namespacing as
+    :func:`poisson_arrivals`."""
+    out: List[Arrival] = []
+    per_dev = [num_requests // num_devices] * num_devices
+    for i in range(num_requests % num_devices):
+        per_dev[i] += 1
+    for dev, n in enumerate(per_dev):
+        rng = np.random.default_rng([seed, device_offset + dev])
+        t = 0.0
+        for _ in range(n):
+            unit = rng.pareto(alpha) * (alpha - 1.0) if alpha is not None \
+                else rng.exponential(1.0)
+            t += unit / max(rate_of(t), 1e-9)
+            tokens = None
+            if vocab_size:
+                tokens = rng.integers(0, vocab_size, size=(prompt_len,),
+                                      dtype=np.int64).astype(np.int32)
+            out.append(Arrival(device_offset + dev, t, tokens, cell))
+    return out
+
+
+def pareto_arrivals(*, num_devices: int, num_requests: int,
+                    arrival_rate: float, prompt_len: int,
+                    alpha: float = 1.5, vocab_size: Optional[int] = None,
+                    seed: int = 0, device_offset: int = 0,
+                    cell: int = 0) -> List[Arrival]:
+    """Heavy-tailed arrivals: Pareto(alpha) inter-arrival gaps scaled to
+    the same 1/arrival_rate mean as the Poisson builder — bursts and long
+    idle gaps, the traffic shape that actually stresses admission
+    control."""
+    assert arrival_rate > 0 and alpha > 1.0, (arrival_rate, alpha)
+    return _modulated_arrivals(
+        lambda t: arrival_rate, num_devices=num_devices,
+        num_requests=num_requests, prompt_len=prompt_len,
+        vocab_size=vocab_size, seed=seed, device_offset=device_offset,
+        cell=cell, alpha=alpha)
+
+
+def diurnal_arrivals(*, num_devices: int, num_requests: int,
+                     arrival_rate: float, prompt_len: int,
+                     period_s: float = 1.0, depth: float = 0.8,
+                     alpha: Optional[float] = None,
+                     vocab_size: Optional[int] = None, seed: int = 0,
+                     device_offset: int = 0, cell: int = 0) -> List[Arrival]:
+    """Diurnal load curve: the rate swings cosine-shaped between the peak
+    ``arrival_rate`` (t=0) and the trough ``arrival_rate*(1-depth)`` every
+    ``period_s`` virtual seconds."""
+    assert arrival_rate > 0 and period_s > 0, (arrival_rate, period_s)
+
+    def rate_of(t: float) -> float:
+        return arrival_rate * (
+            1.0 - depth * 0.5 * (1.0 - float(np.cos(
+                2.0 * np.pi * t / period_s))))
+    return _modulated_arrivals(
+        rate_of, num_devices=num_devices, num_requests=num_requests,
+        prompt_len=prompt_len, vocab_size=vocab_size, seed=seed,
+        device_offset=device_offset, cell=cell, alpha=alpha)
+
+
+def flash_arrivals(*, num_devices: int, num_requests: int,
+                   arrival_rate: float, prompt_len: int, at: float = 0.2,
+                   dur: float = 0.2, burst: float = 10.0,
+                   alpha: Optional[float] = None,
+                   vocab_size: Optional[int] = None, seed: int = 0,
+                   device_offset: int = 0, cell: int = 0) -> List[Arrival]:
+    """Flash crowd: baseline ``arrival_rate`` except a ``burst``-times
+    spike over ``[at, at+dur)`` — the shed-or-melt scenario the gateway
+    benchmark runs (optionally with Pareto gaps via ``alpha``)."""
+    assert arrival_rate > 0 and dur > 0, (arrival_rate, dur)
+
+    def rate_of(t: float) -> float:
+        return arrival_rate * burst if at <= t < at + dur else arrival_rate
+    return _modulated_arrivals(
+        rate_of, num_devices=num_devices, num_requests=num_requests,
+        prompt_len=prompt_len, vocab_size=vocab_size, seed=seed,
+        device_offset=device_offset, cell=cell, alpha=alpha)
+
+
+def build_arrivals(spec: WorkloadSpec, *, num_devices: int, prompt_len: int,
+                   vocab_size: Optional[int] = None, seed: int = 0,
+                   device_offset: int = 0, cell: int = 0) -> List[Arrival]:
+    """One cell's arrival trace from a :class:`WorkloadSpec`.  The
+    ``poisson`` kind routes through :func:`poisson_arrivals` unchanged, so
+    the legacy shim is byte-identical; every kind then gets its SLO
+    classes from the separate class stream."""
+    assert spec.rate is not None and spec.n is not None, \
+        f"workload needs rate and n resolved, got {spec}"
+    common = dict(num_devices=num_devices, num_requests=spec.n,
+                  arrival_rate=spec.rate, prompt_len=prompt_len,
+                  vocab_size=vocab_size, seed=seed,
+                  device_offset=device_offset, cell=cell)
+    if spec.kind == "poisson":
+        out = poisson_arrivals(**common)
+    elif spec.kind == "pareto":
+        out = pareto_arrivals(alpha=spec.alpha or 1.5, **common)
+    elif spec.kind == "diurnal":
+        out = diurnal_arrivals(period_s=spec.period_s, depth=spec.depth,
+                               alpha=spec.alpha, **common)
+    else:
+        out = flash_arrivals(at=spec.at, dur=spec.dur, burst=spec.burst,
+                             alpha=spec.alpha, **common)
+    return _assign_classes(out, spec.interactive, seed, device_offset)
+
+
 # v2 adds the optional "faults" key to the header (the run's FaultSchedule,
-# so a recorded chaotic run replays its fault sequence byte-for-byte); v1
-# traces stay readable — they simply carry no schedule.
-TRACE_FORMAT = "arrival-trace-v2"
-LEGACY_TRACE_FORMATS = ("arrival-trace-v1",)
+# so a recorded chaotic run replays its fault sequence byte-for-byte); v3
+# the per-arrival "slo" class key (the gateway's SLO classes survive record
+# -> replay).  v1/v2 traces stay readable — their arrivals default to
+# interactive and carry no schedule.
+TRACE_FORMAT = "arrival-trace-v3"
+LEGACY_TRACE_FORMATS = ("arrival-trace-v1", "arrival-trace-v2")
 
 
 def record_arrivals(arrivals: Sequence[Arrival], path: str,
@@ -225,7 +422,7 @@ def record_arrivals(arrivals: Sequence[Arrival], path: str,
             tokens = None if a.tokens is None else \
                 [int(x) for x in np.asarray(a.tokens)]
             f.write(json.dumps({"cell": a.cell, "device": a.device,
-                                "t": a.t, "tokens": tokens},
+                                "slo": a.slo, "t": a.t, "tokens": tokens},
                                sort_keys=True) + "\n")
 
 
@@ -255,7 +452,8 @@ def trace_arrivals(path: str) -> List[Arrival]:
             if tokens is not None:
                 tokens = np.asarray(tokens, np.int32)
             out.append(Arrival(device=rec["device"], t=rec["t"],
-                               tokens=tokens, cell=rec.get("cell", 0)))
+                               tokens=tokens, cell=rec.get("cell", 0),
+                               slo=rec.get("slo", "interactive")))
     assert len(out) == header["n"], \
         f"{path}: truncated trace ({len(out)} of {header['n']} arrivals)"
     return out
@@ -303,6 +501,10 @@ class SimConfig:
     seed: int = 0
     numerics: bool = True
     arrivals: Optional[Sequence[Arrival]] = None   # overrides Poisson build
+    # workload spec (a WorkloadSpec or its grammar string): THE arrival
+    # API.  Its rate/n/prompt_len override the three legacy fields above,
+    # which remain a deprecation shim onto WorkloadSpec(kind="poisson").
+    workload: Optional[Union[str, WorkloadSpec]] = None
     # flight recorder (all opt-in; the default path is byte-identical to a
     # build without any of it)
     trace: bool = False                      # virtual-clock span tracing
@@ -316,11 +518,29 @@ class SimConfig:
     # byte-identical to a build without the module.
     faults: Optional[object] = None
     recovery: Optional[RecoveryPolicy] = None
+    # serving gateway (runtime/gateway.py): a GatewayPolicy, its grammar
+    # string, or None.  The all-off GatewayPolicy() is byte-identical to
+    # None (asserted in tests) — the same contract the fault layer makes.
+    gateway: Optional[Union[str, GatewayPolicy]] = None
 
 
 class Simulation:
     def __init__(self, sim_cfg: SimConfig):
         c = sim_cfg
+        # resolve the workload spec first: its rate/n/prompt_len override
+        # the legacy SimConfig fields everywhere downstream (max_len,
+        # controllers, arrival builders all read the resolved values)
+        self.workload: Optional[WorkloadSpec] = None
+        if c.workload is not None:
+            w = WorkloadSpec.parse(c.workload) \
+                if isinstance(c.workload, str) else c.workload
+            self.workload = w
+            overrides = {k: v for k, v in (("arrival_rate", w.rate),
+                                           ("num_requests", w.n),
+                                           ("prompt_len", w.prompt_len))
+                         if v is not None}
+            if overrides:
+                c = replace(c, **overrides)
         assert c.mode in ("split", "cloud", "edge"), c.mode
         assert c.transport in ("cache_handoff", "streamed", "auto"), \
             c.transport
@@ -389,14 +609,13 @@ class Simulation:
         self.cost = self.cells[0].cost
         self._remaining = 0
         self.server = CloudServer(
-            loop=self.loop, cost=self.cost, bank=self.bank, mode=c.mode,
-            d_r=c.d_r, telemetry=self.telemetry,
-            max_concurrent=c.max_concurrent,
-            background_load=c.background_load,
-            engine_seed=c.seed,
-            max_len=c.prompt_len + c.max_new_tokens + 2,
-            on_done=self._on_done, numerics_split=self.cells[0].current_split,
-            wire=self.cells[0].wire)
+            CloudSpec(cost=self.cost, bank=self.bank, mode=c.mode,
+                      d_r=c.d_r, max_concurrent=c.max_concurrent,
+                      background_load=c.background_load, engine_seed=c.seed,
+                      max_len=c.prompt_len + c.max_new_tokens + 2,
+                      numerics_split=self.cells[0].current_split),
+            loop=self.loop, telemetry=self.telemetry,
+            wire=self.cells[0].wire, on_done=self._on_done)
         self.server.tracer = self.tracer
         self.devices: List[EdgeDevice] = []
         for cell in self.cells:
@@ -411,15 +630,31 @@ class Simulation:
                     cell=cell.name, cell_index=cell.index))
                 self.devices[-1].tracer = self.tracer
         self.server.devices = self.devices       # downlink delivery targets
+        self.gateway: Optional[Gateway] = None
+        if c.gateway is not None:
+            policy = GatewayPolicy.parse(c.gateway) \
+                if isinstance(c.gateway, str) else c.gateway
+            if policy.autoscale:
+                assert not c.numerics, \
+                    "autoscaled replicas are a timing-only capacity model " \
+                    "(the serving engines are built at a fixed max_batch)"
+            self.gateway = Gateway(policy, loop=self.loop,
+                                   server=self.server,
+                                   telemetry=self.telemetry)
         self.controllers: List[object] = []
         if c.adapt and c.mode == "split":
             from repro.runtime.controller import AdaptiveSplitController
             for cell in self.cells:
                 spec = cell.spec
                 tp_mode = spec.transport or c.transport
+                # a cell whose breaker is open sees a ceilinged cloud load
+                # (the gateway is refusing its traffic), so its controller
+                # routes edge-heavy exactly as during a cloud outage
+                cloud_load = self.gateway.cell_load_fn(cell.name) \
+                    if self.gateway is not None else self.server.current_load
                 cell.controller = AdaptiveSplitController(
                     loop=self.loop, uplink=cell.wire,
-                    cloud_load=self.server.current_load,
+                    cloud_load=cloud_load,
                     cfg=base, d_r=c.d_r, seq=c.prompt_len,
                     candidate_splits=self.candidates,
                     edge=spec.hardware(), cloud=c.cloud,
@@ -440,6 +675,10 @@ class Simulation:
                     edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp,
                     cell=cell.name, tracer=self.tracer)
                 self.controllers.append(cell.controller)
+                if self.gateway is not None:
+                    # breaker open/close transitions nudge the cell's
+                    # controller off-cycle, like a link handover does
+                    self.gateway.pokes[cell.name] = cell.controller.poke
         self.injector: Optional[FaultInjector] = None
         self.fault_schedule: Optional[FaultSchedule] = None
         if c.faults is not None or c.recovery is not None:
@@ -498,6 +737,8 @@ class Simulation:
             ctl.start()
         if self.sampler is not None:
             self.sampler.start()
+        if self.gateway is not None:
+            self.gateway.start()
         self.loop.run()
         if self._remaining:
             # without the fault layer every request must complete; with it,
@@ -583,11 +824,13 @@ class Simulation:
         return sampler
 
     def _build_arrivals(self) -> List[Arrival]:
-        """Per-cell Poisson streams: explicit CellSpec.num_requests is
-        honored, the rest of the fleet-wide total splits evenly (remainder
-        to earlier cells) — the 1-cell case reduces to the classic
-        builder."""
+        """Per-cell arrival streams through the :class:`WorkloadSpec` path
+        (the legacy rate/n fields synthesize the Poisson spec): explicit
+        CellSpec.num_requests is honored, the rest of the fleet-wide total
+        splits evenly (remainder to earlier cells) — the 1-cell Poisson
+        case reduces to the classic builder byte-for-byte."""
         c = self.sim_cfg
+        base_spec = self.workload or WorkloadSpec()
         explicit = sum(s.spec.num_requests or 0 for s in self.cells)
         open_cells = [cell for cell in self.cells
                       if cell.spec.num_requests is None]
@@ -602,11 +845,11 @@ class Simulation:
             spec = cell.spec
             n = spec.num_requests if spec.num_requests is not None \
                 else next(shares)
-            out.extend(poisson_arrivals(
-                num_devices=spec.num_devices, num_requests=n,
-                arrival_rate=spec.arrival_rate
-                if spec.arrival_rate is not None else c.arrival_rate,
-                prompt_len=c.prompt_len,
+            out.extend(build_arrivals(
+                replace(base_spec, n=n,
+                        rate=spec.arrival_rate
+                        if spec.arrival_rate is not None else c.arrival_rate),
+                num_devices=spec.num_devices, prompt_len=c.prompt_len,
                 vocab_size=self.base_cfg.vocab_size if c.numerics else None,
                 seed=c.seed, device_offset=cell.dev_base, cell=cell.index))
         return out
@@ -637,6 +880,8 @@ class Simulation:
                 self.sampler.stop()
             if self.injector is not None:
                 self.injector.stop()    # cancel the watchdog: loop can drain
+            if self.gateway is not None:
+                self.gateway.stop()     # cancel the autoscale tick
 
     def _schedule_arrivals(self) -> None:
         c = self.sim_cfg
@@ -647,7 +892,7 @@ class Simulation:
             trace = RequestTrace(
                 uid=uid, device=a.device, mode=c.mode, wire_mode=c.wire_mode,
                 split=0, prompt_len=c.prompt_len,
-                cell=self.cells[a.cell].name)
+                cell=self.cells[a.cell].name, slo_class=a.slo)
             req = SimRequest(trace=trace, tokens=a.tokens,
                              max_new_tokens=c.max_new_tokens)
             self.requests.append(req)

@@ -22,8 +22,12 @@ from repro.runtime.metrics import MetricsRegistry
 # registry-backed counters + optional jit_profile section.  v3 = request
 # outcomes (outcome/failure/retries/migrations/fallback), latency
 # aggregates partitioned to completed requests, availability/failure
-# counts in the summary, and the controller decision reason.
-SCHEMA_VERSION = 3
+# counts in the summary, and the controller decision reason.  v4 = the
+# serving gateway (runtime/gateway.py): per-request SLO class
+# (slo_class/hedges/cache_hit on the trace), the "shed" outcome with
+# conservation counts (n_done + n_failed + n_shed == n_requests), and the
+# per-class "classes" aggregate section.
+SCHEMA_VERSION = 4
 
 
 @dataclass
@@ -56,11 +60,16 @@ class RequestTrace:
     t_done: float = 0.0                # response fully at the mobile
     # fault/recovery outcome (schema v3) — all defaults describe the
     # no-fault world, so calm runs serialize identically modulo the keys
-    outcome: str = "done"              # done | failed
-    failure: str = ""                  # reason when outcome == "failed"
+    outcome: str = "done"              # done | failed | shed
+    failure: str = ""                  # reason when outcome != "done"
     retries: int = 0                   # timeout-driven resends
     migrations: int = 0                # device-to-device migrations
     fallback: str = ""                 # "edge" when degraded to edge-only
+    # serving-gateway fields (schema v4) — defaults describe the
+    # no-gateway world, same contract as the fault block above
+    slo_class: str = "interactive"     # interactive | batch
+    hedges: int = 0                    # duplicate payload sends raced
+    cache_hit: bool = False            # served from the LRU response cache
 
     # -- derived breakdown --------------------------------------------------
     @property
@@ -223,13 +232,47 @@ class Telemetry:
             out["throughput_rps"] = len(done) / span if span > 0 \
                 else float("nan")
             # outcome counts (schema v3): availability counts degraded
-            # edge-fallback completions as served — they got an answer
+            # edge-fallback completions as served — they got an answer.
+            # Shed (v4) partitions out of failed: the gateway REFUSED these
+            # by policy, it did not lose them — and the three outcomes are
+            # conserved: n_done + n_failed + n_shed == n_requests.
+            shed = sum(1 for t in self.traces if t.outcome == "shed")
             out["n_done"] = len(done)
-            out["n_failed"] = len(self.traces) - len(done)
+            out["n_failed"] = len(self.traces) - len(done) - shed
+            out["n_shed"] = shed
             out["n_migrated"] = sum(1 for t in self.traces if t.migrations)
             out["n_retried"] = sum(1 for t in self.traces if t.retries)
             out["n_fallback"] = sum(1 for t in self.traces if t.fallback)
+            out["n_hedged"] = sum(1 for t in self.traces if t.hedges)
+            out["n_cache_hits"] = sum(1 for t in self.traces if t.cache_hit)
             out["availability_pct"] = 100.0 * len(done) / len(self.traces)
+        return out
+
+    def class_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-SLO-class aggregates (schema v4): latency percentiles over
+        the completed requests of each class plus its outcome counts — the
+        view the gateway benchmark's shed-on/shed-off comparison reads."""
+        out: Dict[str, Dict[str, float]] = {}
+        classes: List[str] = []
+        for t in self.traces:
+            if t.slo_class not in classes:
+                classes.append(t.slo_class)
+        for cls in classes:
+            ts = [t for t in self.traces if t.slo_class == cls]
+            done = [t for t in ts if t.outcome == "done"]
+            shed = sum(1 for t in ts if t.outcome == "shed")
+            lat = [t.latency_s for t in done]
+            out[cls] = {
+                "n_requests": len(ts),
+                "n_done": len(done),
+                "n_failed": len(ts) - len(done) - shed,
+                "n_shed": shed,
+                "latency_p50_ms": percentile(lat, 50) * 1e3,
+                "latency_p95_ms": percentile(lat, 95) * 1e3,
+                "latency_p99_ms": percentile(lat, 99) * 1e3,
+                "latency_mean_ms": (sum(lat) / len(lat) * 1e3) if lat
+                else float("nan"),
+            }
         return out
 
     def split_trajectory(self) -> List[Dict[str, float]]:
@@ -256,10 +299,12 @@ class Telemetry:
         for cell in self.cells:
             ts = [t for t in self.traces if t.cell == cell]
             done = [t for t in ts if t.outcome == "done"]
+            shed = sum(1 for t in ts if t.outcome == "shed")
             lat = [t.latency_s for t in done]
             out[cell] = {
                 "n_requests": len(ts),
-                "n_failed": len(ts) - len(done),
+                "n_failed": len(ts) - len(done) - shed,
+                "n_shed": shed,
                 "latency_p50_ms": percentile(lat, 50) * 1e3,
                 "latency_p95_ms": percentile(lat, 95) * 1e3,
                 "latency_mean_ms": (sum(lat) / len(lat) * 1e3) if lat
@@ -324,6 +369,7 @@ class Telemetry:
         doc = {
             "schema_version": SCHEMA_VERSION,
             "summary": self.summary(),
+            "classes": self.class_summary(),
             "cells": self.cell_summary(),
             "fairness": self.fairness(),
             "counters": dict(self.counters),

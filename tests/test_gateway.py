@@ -1,0 +1,373 @@
+"""Serving gateway invariants (DESIGN.md section 17): priority ordering,
+shed conservation, circuit-breaker transitions on the virtual clock, LRU
+response-cache byte-identity, the GatewayPolicy-unset == legacy-FIFO
+byte-identity contract, and a 10^5-request heavy-tailed run terminating in
+sane wall time."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.actors import SimRequest
+from repro.runtime.gateway import (CircuitBreaker, GatewayPolicy, JobQueue,
+                                   ResponseCache)
+from repro.runtime.simulator import (Arrival, CellSpec, SimConfig,
+                                     Simulation, WorkloadSpec, run_sim)
+from repro.runtime.telemetry import RequestTrace
+
+
+def small_cfg(layers=4):
+    return dataclasses.replace(get_config("qwen3-8b").reduced(),
+                               num_layers=layers)
+
+
+def timing_cfg(**kw):
+    defaults = dict(cfg=small_cfg(), mode="split", wire_mode="int8",
+                    network="3g", num_devices=4, num_requests=16,
+                    arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
+                    d_r=16, numerics=False, seed=0)
+    defaults.update(kw)
+    return SimConfig(**defaults)
+
+
+def _req(uid, slo="interactive"):
+    return SimRequest(trace=RequestTrace(uid=uid, device=0, mode="split",
+                                         wire_mode="int8", split=1,
+                                         prompt_len=8, slo_class=slo),
+                      tokens=None, max_new_tokens=1)
+
+
+# the bench's cloud-bound 2-pod topology: negligible wire, the shared
+# slot pool + background tenants are the contended resource
+PODS = (CellSpec(name="pod-jet", network="inter_pod", num_devices=4,
+                 device="jetson"),
+        CellSpec(name="pod-ph", network="inter_pod", num_devices=4,
+                 device="phone"))
+
+
+def flash_cfg(workload, gateway, **kw):
+    defaults = dict(cfg=small_cfg(), mode="split", wire_mode="int8",
+                    topology=PODS, num_requests=0, prompt_len=32,
+                    max_new_tokens=16, numerics=False, seed=0,
+                    max_concurrent=4, workload=workload, gateway=gateway,
+                    background_load=lambda t: 0.95)
+    defaults.update(kw)
+    return SimConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# GatewayPolicy + grammar
+# ---------------------------------------------------------------------------
+
+
+def test_policy_parse_grammar():
+    p = GatewayPolicy.parse("priority,shed,slo=40/400,reserve=1,cache=64,"
+                            "hedge=0.03,breaker,replicas=3,spinup=0.1")
+    assert p.priority and p.shed and p.breaker and p.hedge and p.autoscale
+    assert p.slo_interactive_ms == 40.0 and p.slo_batch_ms == 400.0
+    assert p.reserved_slots == 1 and p.cache_size == 64
+    assert p.hedge_delay_s == 0.03
+    assert p.max_replicas == 3 and p.spin_up_s == 0.1
+    # slo=X/inf means batch is never shed; bare slo implies shed
+    p2 = GatewayPolicy.parse("slo=100/inf")
+    assert p2.shed and p2.slo_batch_ms is None
+    with pytest.raises(ValueError):
+        GatewayPolicy.parse("priority,bogus=1")
+
+
+def test_policy_default_is_all_off():
+    p = GatewayPolicy()
+    assert not (p.priority or p.shed or p.breaker or p.hedge or p.autoscale)
+    assert p.cache_size == 0
+
+
+# ---------------------------------------------------------------------------
+# priority queue
+# ---------------------------------------------------------------------------
+
+
+def test_jobqueue_fifo_when_priority_off():
+    q = JobQueue(priority=False)
+    reqs = [_req(i, "batch" if i % 2 else "interactive") for i in range(8)]
+    for r in reqs:
+        q.append(r)
+    assert [q.popleft().trace.uid for _ in range(8)] == list(range(8))
+
+
+def test_jobqueue_interactive_never_behind_batch():
+    q = JobQueue(priority=True)
+    order = ["batch", "batch", "interactive", "batch", "interactive"]
+    reqs = [_req(i, slo) for i, slo in enumerate(order)]
+    for r in reqs:
+        q.append(r)
+    popped = [q.popleft().trace.uid for _ in range(len(reqs))]
+    # both interactive first (in arrival order), then the batch in order
+    assert popped == [2, 4, 0, 1, 3]
+
+
+def test_jobqueue_deque_surface():
+    q = JobQueue(priority=True)
+    reqs = [_req(i, "batch" if i == 1 else "interactive") for i in range(3)]
+    for r in reqs:
+        q.append(r)
+    assert len(q) == 3 and reqs[1] in q
+    assert q.peek() is reqs[0]
+    q.remove(reqs[0])
+    assert len(q) == 2 and reqs[0] not in q
+    assert [r.trace.uid for r in q] == [2, 1]    # iter in priority order
+    q.clear()
+    assert len(q) == 0 and not q
+    with pytest.raises(IndexError):
+        q.popleft()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (pure virtual-time state machine)
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_open_halfopen_close_cycle():
+    cb = CircuitBreaker(fail_threshold=3, halfopen_after_s=0.5, probes=2)
+    assert cb.allow(0.0) and cb.state == "closed"
+    assert not cb.record_failure(0.10)
+    assert not cb.record_failure(0.11)
+    assert cb.record_failure(0.12)          # third consecutive: opens
+    assert cb.state == "open" and not cb.allow(0.2)
+    # cooldown elapses -> half_open admits exactly `probes` trials
+    assert cb.allow(0.12 + 0.5)
+    assert cb.state == "half_open"
+    assert cb.allow(0.65) and not cb.allow(0.66)
+    assert not cb.record_success(0.70)      # first probe success
+    assert cb.record_success(0.71)          # second: closes
+    assert cb.state == "closed" and cb.allow(0.72)
+
+
+def test_breaker_halfopen_failure_reopens():
+    cb = CircuitBreaker(fail_threshold=1, halfopen_after_s=0.5, probes=1)
+    assert cb.record_failure(0.0) and cb.state == "open"
+    assert cb.allow(0.6) and cb.state == "half_open"
+    assert cb.record_failure(0.61)          # probe failed: re-open
+    assert cb.state == "open" and not cb.allow(0.62)
+    # success after the next cooldown closes it again
+    assert cb.allow(1.2) and cb.record_success(1.25)
+    assert cb.state == "closed"
+
+
+def test_breaker_success_resets_failure_streak():
+    cb = CircuitBreaker(fail_threshold=2, halfopen_after_s=0.5, probes=1)
+    cb.record_failure(0.0)
+    cb.record_success(0.1)                  # streak broken
+    assert not cb.record_failure(0.2)       # needs 2 consecutive again
+    assert cb.state == "closed"
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: GatewayPolicy() == gateway=None == legacy FIFO
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_unset_byte_identical_timing():
+    base = timing_cfg()
+    a = run_sim(base).to_json()
+    b = run_sim(timing_cfg(gateway=GatewayPolicy())).to_json()
+    c = run_sim(timing_cfg(gateway=None)).to_json()
+    assert a == b == c
+
+
+def test_gateway_unset_byte_identical_numerics():
+    kw = dict(num_devices=2, num_requests=4, numerics=True, prompt_len=8,
+              max_new_tokens=2)
+    a = run_sim(timing_cfg(**kw)).to_json()
+    b = run_sim(timing_cfg(gateway=GatewayPolicy(), **kw)).to_json()
+    assert a == b
+
+
+def test_gateway_runs_are_deterministic():
+    wl = WorkloadSpec(kind="flash", rate=6.0, n=600, interactive=0.25,
+                      alpha=1.5, at=1.0, dur=5.0, burst=15.0)
+    gw = "priority,shed,slo=150/1000,reserve=1,breaker,hedge"
+    a = run_sim(flash_cfg(wl, gw)).to_json()
+    b = run_sim(flash_cfg(wl, gw)).to_json()
+    assert a == b
+
+
+def test_gateway_record_replay_byte_identical(tmp_path):
+    wl = WorkloadSpec(kind="flash", rate=6.0, n=400, interactive=0.25,
+                      alpha=1.5, at=1.0, dur=4.0, burst=15.0)
+    gw = "priority,shed,slo=150/1000,reserve=1"
+    sim = Simulation(flash_cfg(wl, gw))
+    path = str(tmp_path / "trace.jsonl")
+    sim.record_trace(path)
+    recorded = sim.run().to_json()
+    from repro.runtime.simulator import trace_arrivals
+    arrivals = trace_arrivals(path)
+    # the SLO classes survive record -> replay (arrival-trace-v3)
+    assert {a.slo for a in arrivals} == {"interactive", "batch"}
+    replayed = Simulation(flash_cfg(None, gw, arrivals=arrivals)).run()
+    assert recorded == replayed.to_json()
+
+
+# ---------------------------------------------------------------------------
+# shedding + conservation
+# ---------------------------------------------------------------------------
+
+
+def test_shed_conservation_and_batch_absorbs():
+    wl = WorkloadSpec(kind="flash", rate=6.0, n=3000, interactive=0.25,
+                      alpha=1.5, at=2.0, dur=20.0, burst=30.0)
+    tel = run_sim(flash_cfg(wl, "priority,shed,slo=150/600,reserve=1"))
+    s = tel.summary()
+    assert s["n_done"] + s["n_failed"] + s["n_shed"] == 3000
+    assert s["n_shed"] > 0
+    assert tel.counters["gateway_shed"] == s["n_shed"]
+    cls = tel.class_summary()
+    # priority + admission control: the interactive class is never shed
+    # (it jumps the queue, so its predicted delay stays under SLO) while
+    # batch absorbs the whole shed
+    assert cls["interactive"]["n_shed"] == 0
+    assert cls["batch"]["n_shed"] == s["n_shed"]
+    # every shed trace is terminal and self-consistent
+    for t in tel.traces:
+        if t.outcome == "shed":
+            assert t.failure in ("admission", "breaker_open")
+            assert t.t_done >= t.t_arrival
+
+
+def test_shed_protects_interactive_p99():
+    wl = WorkloadSpec(kind="flash", rate=6.0, n=3000, interactive=0.25,
+                      alpha=1.5, at=2.0, dur=20.0, burst=30.0)
+    off = run_sim(flash_cfg(wl, None)).class_summary()
+    on = run_sim(
+        flash_cfg(wl, "priority,shed,slo=150/600,reserve=1")
+    ).class_summary()
+    ratio = off["interactive"]["latency_p99_ms"] / \
+        on["interactive"]["latency_p99_ms"]
+    assert ratio >= 3.0, f"interactive p99 only improved {ratio:.2f}x"
+
+
+# ---------------------------------------------------------------------------
+# LRU response cache
+# ---------------------------------------------------------------------------
+
+
+def test_response_cache_lru_eviction():
+    cache = ResponseCache(size=2)
+    r1, r2, r3 = (_req(i) for i in range(3))
+    for i, r in enumerate((r1, r2, r3)):
+        r.tokens = np.full((4,), i, np.int32)
+    k1, k2, k3 = (ResponseCache.key(r) for r in (r1, r2, r3))
+    cache.put(k1, [1, 2]); cache.put(k2, [3, 4])
+    assert cache.get(k1) == (1, 2)          # touch k1: k2 becomes LRU
+    cache.put(k3, [5, 6])
+    assert cache.get(k2) is None and len(cache) == 2
+    assert cache.get(k1) == (1, 2) and cache.get(k3) == (5, 6)
+    # timing-only requests (no prompt) never enter the cache
+    assert ResponseCache.key(_req(9)) is None
+
+
+def test_cache_hit_is_byte_identical():
+    cfg = small_cfg()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=(8,),
+                          dtype=np.int64).astype(np.int32)
+    other = rng.integers(0, cfg.vocab_size, size=(8,),
+                         dtype=np.int64).astype(np.int32)
+    arrivals = [Arrival(device=0, t=0.0, tokens=prompt),
+                Arrival(device=1, t=0.05, tokens=other),
+                Arrival(device=0, t=5.0, tokens=prompt)]   # repeat
+    sim = Simulation(timing_cfg(
+        numerics=True, num_devices=2, num_requests=3, prompt_len=8,
+        max_new_tokens=3, arrivals=arrivals,
+        gateway=GatewayPolicy(cache_size=8)))
+    tel = sim.run()
+    first, _, repeat = sim.requests
+    assert repeat.trace.cache_hit and not first.trace.cache_hit
+    assert repeat.cached_ids == tuple(first.engine_req.generated)
+    assert tel.counters["gateway_cache_hits"] == 1
+    assert tel.summary()["n_cache_hits"] == 1
+    # the hit never touched the accelerator: zero cloud time
+    assert repeat.trace.t_cloud_done == repeat.trace.t_cloud_start
+
+
+# ---------------------------------------------------------------------------
+# hedged retries + breaker in the loop + autoscale
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_duplicates_are_deduped():
+    # a slow 3g uplink: interactive sends stuck past the hedge delay get a
+    # duplicate, the cloud drops whichever lands second, everyone finishes
+    tel = run_sim(timing_cfg(
+        num_requests=32, arrival_rate=40.0,
+        workload="poisson:rate=40,n=32,interactive=0.5",
+        gateway=GatewayPolicy(hedge=True, hedge_delay_s=0.005)))
+    s = tel.summary()
+    assert s["n_done"] == 32 and s["n_shed"] == 0
+    assert s["n_hedged"] > 0
+    assert tel.counters["gateway_hedges"] == sum(
+        t.hedges for t in tel.traces)
+    # only interactive requests hedge
+    assert all(t.slo_class == "interactive"
+               for t in tel.traces if t.hedges)
+
+
+def test_breaker_opens_under_cloud_outage():
+    # an injected cloud outage drops payloads -> the breaker counts them
+    # as failures, opens, sheds at the gate, then recovers half-open
+    wl = WorkloadSpec(kind="poisson", rate=20.0, n=400, interactive=0.5)
+    tel = run_sim(flash_cfg(
+        wl, "breaker,shed,slo=150/1500", max_new_tokens=2,
+        faults="outage@0.3+0.4", recovery=None))
+    c = tel.counters
+    assert c["gateway_breaker_opens"] >= 1
+    assert c["gateway_breaker_shed"] > 0
+    assert c["gateway_breaker_closes"] >= 1     # half-open probes recovered
+    s = tel.summary()
+    assert s["n_done"] + s["n_failed"] + s["n_shed"] == 400
+
+
+def test_autoscale_adds_replicas_with_spinup_lag():
+    wl = WorkloadSpec(kind="flash", rate=6.0, n=1500, interactive=0.25,
+                      alpha=1.5, at=1.0, dur=10.0, burst=20.0)
+    sim = Simulation(flash_cfg(wl, "autoscale,replicas=3,spinup=0.2"))
+    tel = sim.run()
+    assert tel.counters["gateway_scale_ups"] >= 1
+    assert sim.server.replicas >= 2
+    assert len(sim.server.slots) == sim.server.replicas * 4
+    # autoscaling shortens the melt: strictly better p99 than fixed capacity
+    base = run_sim(flash_cfg(wl, None)).summary()
+    scaled = tel.summary()
+    assert scaled["latency_p99_ms"] < base["latency_p99_ms"]
+
+
+def test_autoscale_requires_timing_only():
+    with pytest.raises(AssertionError):
+        Simulation(timing_cfg(numerics=True, gateway="autoscale"))
+
+
+def test_reserved_slots_must_leave_room():
+    with pytest.raises(AssertionError):
+        Simulation(timing_cfg(max_concurrent=2,
+                              gateway=GatewayPolicy(reserved_slots=2)))
+
+
+# ---------------------------------------------------------------------------
+# scale: 10^5 heavy-tailed requests on the virtual clock
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_100k_requests_terminate():
+    wl = WorkloadSpec(kind="pareto", rate=20.0, n=100_000, alpha=1.5,
+                      interactive=0.5)
+    t0 = time.time()
+    tel = run_sim(SimConfig(
+        cfg=small_cfg(), mode="split", wire_mode="int8",
+        network="inter_pod", num_devices=8, prompt_len=16,
+        max_new_tokens=1, numerics=False, seed=0, max_concurrent=8,
+        workload=wl, gateway="priority,shed,slo=250/2000"))
+    wall = time.time() - t0
+    s = tel.summary()
+    assert s["n_done"] + s["n_failed"] + s["n_shed"] == 100_000
+    assert wall < 120.0, f"10^5-request run took {wall:.0f}s"

@@ -1,0 +1,214 @@
+"""Workload-spec API (DESIGN.md section 17): the WorkloadSpec grammar, the
+legacy-field deprecation shim (old-style configs build the identical
+arrival list and telemetry), the arrival builders, the CloudSpec
+constructor diet, and the audited `repro.runtime` public surface."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.actors import CloudServer, CloudSpec
+from repro.runtime.clock import EventLoop
+from repro.runtime.simulator import (SimConfig, Simulation, WorkloadSpec,
+                                     build_arrivals, diurnal_arrivals,
+                                     flash_arrivals, pareto_arrivals,
+                                     record_arrivals, run_sim,
+                                     trace_arrivals)
+from repro.runtime.split_exec import CostModel
+from repro.runtime.telemetry import Telemetry
+
+
+def small_cfg(layers=4):
+    return dataclasses.replace(get_config("qwen3-8b").reduced(),
+                               num_layers=layers)
+
+
+def timing_cfg(**kw):
+    defaults = dict(cfg=small_cfg(), mode="split", wire_mode="int8",
+                    network="3g", num_devices=4, num_requests=16,
+                    arrival_rate=20.0, prompt_len=32, max_new_tokens=1,
+                    d_r=16, numerics=False, seed=0)
+    defaults.update(kw)
+    return SimConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# grammar
+# ---------------------------------------------------------------------------
+
+
+def test_workload_parse_grammar():
+    w = WorkloadSpec.parse("pareto:alpha=1.5,rate=20,n=100000,"
+                           "interactive=0.25,prompt_len=16")
+    assert w.kind == "pareto" and w.alpha == 1.5 and w.rate == 20.0
+    assert w.n == 100000 and w.interactive == 0.25 and w.prompt_len == 16
+    f = WorkloadSpec.parse("flash:rate=10,n=1000,at=0.2,dur=0.3,burst=20")
+    assert f.kind == "flash" and f.at == 0.2 and f.dur == 0.3 and \
+        f.burst == 20.0
+    d = WorkloadSpec.parse("diurnal:rate=20,n=500,period=2.0,depth=0.8")
+    assert d.kind == "diurnal" and d.period_s == 2.0 and d.depth == 0.8
+    assert WorkloadSpec.parse("poisson:rate=20,n=16").kind == "poisson"
+
+
+def test_workload_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        WorkloadSpec.parse("poisson:rate=20,bogus=1")
+    with pytest.raises(ValueError):
+        WorkloadSpec.parse("poisson:rate")          # no '='
+    with pytest.raises(AssertionError):
+        WorkloadSpec.parse("lognormal:rate=20")     # unknown kind
+    with pytest.raises(AssertionError):
+        WorkloadSpec(kind="pareto", alpha=0.9)      # infinite-mean tail
+    with pytest.raises(AssertionError):
+        WorkloadSpec(interactive=1.5)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim: old-style config == workload spec, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_fields_equal_workload_spec():
+    legacy = timing_cfg()
+    spec = timing_cfg(workload="poisson:rate=20,n=16,prompt_len=32")
+    a, b = Simulation(legacy), Simulation(spec)
+    assert [dataclasses.astuple(x) for x in a.arrivals] == \
+        [dataclasses.astuple(x) for x in b.arrivals]
+    assert a.run().to_json() == b.run().to_json()
+
+
+def test_workload_overrides_legacy_fields():
+    sim = Simulation(timing_cfg(num_requests=4, arrival_rate=5.0,
+                                prompt_len=8,
+                                workload="poisson:rate=20,n=16,"
+                                         "prompt_len=32"))
+    assert len(sim.arrivals) == 16
+    assert sim.sim_cfg.arrival_rate == 20.0 and sim.sim_cfg.prompt_len == 32
+    # equivalent to the plain legacy run with the spec's values
+    assert sim.run().to_json() == run_sim(timing_cfg()).to_json()
+
+
+def test_class_split_never_perturbs_timing():
+    # same kind/rate/n with and without a class split: identical arrival
+    # times and prompts, only the slo labels differ
+    kw = dict(num_devices=4, prompt_len=8, vocab_size=64, seed=3)
+    plain = build_arrivals(WorkloadSpec(rate=20.0, n=32), **kw)
+    classed = build_arrivals(WorkloadSpec(rate=20.0, n=32,
+                                          interactive=0.5), **kw)
+    assert [a.t for a in plain] == [a.t for a in classed]
+    for a, b in zip(plain, classed):
+        assert np.array_equal(a.tokens, b.tokens)
+    assert {a.slo for a in plain} == {"interactive"}
+    assert {a.slo for a in classed} == {"interactive", "batch"}
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_mean_matches_rate():
+    arr = pareto_arrivals(num_devices=1, num_requests=4000,
+                          arrival_rate=10.0, prompt_len=8, alpha=2.5,
+                          seed=0)
+    gaps = np.diff([0.0] + [a.t for a in arr])
+    assert abs(gaps.mean() - 0.1) < 0.02       # mean gap ~ 1/rate
+    # heavy tail: the max gap dwarfs the exponential's typical extremes
+    assert gaps.max() > 5 * gaps.mean()
+
+
+def test_diurnal_rate_swings():
+    arr = diurnal_arrivals(num_devices=1, num_requests=2000,
+                           arrival_rate=50.0, prompt_len=8, period_s=2.0,
+                           depth=0.9, seed=0)
+    ts = np.array([a.t for a in arr])
+    # peak half-cycles are denser than trough half-cycles
+    peak = sum(1 for t in ts if (t % 2.0) < 0.5 or (t % 2.0) > 1.5)
+    trough = sum(1 for t in ts if 0.5 <= (t % 2.0) <= 1.5)
+    assert peak > 2 * trough
+
+
+def test_flash_crowd_burst_density():
+    arr = flash_arrivals(num_devices=2, num_requests=2000,
+                         arrival_rate=10.0, prompt_len=8, at=1.0, dur=1.0,
+                         burst=10.0, seed=0)
+    ts = [a.t for a in arr]
+    inside = sum(1 for t in ts if 1.0 <= t < 2.0)
+    before = sum(1 for t in ts if 0.0 <= t < 1.0)
+    assert inside > 4 * max(before, 1)
+
+
+def test_builders_are_deterministic_and_device_namespaced():
+    kw = dict(num_devices=3, num_requests=30, arrival_rate=10.0,
+              prompt_len=8, alpha=1.5, seed=7)
+    a, b = pareto_arrivals(**kw), pareto_arrivals(**kw)
+    assert [x.t for x in a] == [x.t for x in b]
+    # device_offset shifts the streams (independent per-cell arrivals)
+    c = pareto_arrivals(**dict(kw, device_offset=3))
+    assert [x.t for x in a] != [x.t for x in c]
+    assert {x.device for x in c} == {3, 4, 5}
+
+
+def test_trace_v3_roundtrip_and_v2_legacy(tmp_path):
+    arr = build_arrivals(
+        WorkloadSpec(kind="pareto", rate=10.0, n=12, interactive=0.5),
+        num_devices=2, prompt_len=4, vocab_size=32, seed=1)
+    path = str(tmp_path / "t.jsonl")
+    record_arrivals(arr, path)
+    back = trace_arrivals(path)
+    assert [x.slo for x in arr] == [x.slo for x in back]
+    assert [x.t for x in arr] == [x.t for x in back]
+    assert [x.device for x in arr] == [x.device for x in back]
+    for a, b in zip(arr, back):
+        assert np.array_equal(a.tokens, b.tokens)
+    # a v2 trace (no slo key) replays as all-interactive
+    legacy = str(tmp_path / "v2.jsonl")
+    with open(legacy, "w") as f:
+        f.write(json.dumps({"format": "arrival-trace-v2", "n": 1}) + "\n")
+        f.write(json.dumps({"cell": 0, "device": 0, "t": 0.5,
+                            "tokens": None}) + "\n")
+    old = trace_arrivals(legacy)
+    assert old[0].slo == "interactive" and old[0].t == 0.5
+
+
+# ---------------------------------------------------------------------------
+# CloudSpec constructor diet
+# ---------------------------------------------------------------------------
+
+
+def test_cloud_spec_is_frozen_and_wires():
+    from repro.core.profiler import GTX_1080TI, JETSON_TX2
+    cost = CostModel(small_cfg(), JETSON_TX2, GTX_1080TI)
+    spec = CloudSpec(cost=cost, mode="split", max_concurrent=2, max_len=16)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.max_concurrent = 4
+    srv = CloudServer(spec, loop=EventLoop(), telemetry=Telemetry())
+    assert srv.spec is spec and srv.max_concurrent == 2
+    assert len(srv.slots) == 2 and srv.replicas == 1
+    assert srv.gateway is None and len(srv.pending) == 0
+
+
+# ---------------------------------------------------------------------------
+# public API audit
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_all_imports_cleanly():
+    import repro.runtime as rt
+    for name in rt.__all__:
+        assert getattr(rt, name, None) is not None, \
+            f"__all__ exports {name} but it does not resolve"
+    assert len(set(rt.__all__)) == len(rt.__all__), "duplicate exports"
+
+
+def test_runtime_all_matches_design_doc():
+    import repro.runtime as rt
+    doc = open("DESIGN.md").read()
+    marker = "```text runtime-api\n"
+    assert marker in doc, "DESIGN.md lost the runtime-api surface block"
+    block = doc.split(marker, 1)[1].split("```", 1)[0]
+    documented = block.split()
+    assert sorted(documented) == sorted(rt.__all__), \
+        "DESIGN.md section 17 surface drifted from repro.runtime.__all__"
