@@ -296,6 +296,107 @@ def bench_bank():
           f"(exact-shape compiles would add {len(seqs)})")
 
 
+def _wire_codec_report():
+    """Entropy-wire codec economics with the REAL rANS coder on held-out
+    codes.  Both models branch off a shared 120-step rate-free prefix and
+    take a second epoch over the same 120-batch shard — identical data,
+    equal total steps: the baseline continues rate-free, the entropy
+    branch adds the rate term to the loss (learn the task first, compress
+    after — training with the rate term from step 0 lands on a much worse
+    accuracy/rate frontier).  The prior is fit on the tail of the entropy
+    branch's training shard and priced on held-out batches of the same
+    Markov language."""
+    import dataclasses
+    import itertools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import butterfly as bf_lib
+    from repro.core import wire_codec
+    from repro.data import lm_batches
+    from repro.models import model as M
+    from repro.models import transformer as tfm
+    from repro.training import (AdamWConfig, adamw_init, constant_schedule,
+                                make_train_step)
+
+    d_r, steps, rate_weight = 32, 120, 0.35
+
+    def batches(skip, n):
+        return list(itertools.islice(lm_batches(64, 32, 8, seed=5),
+                                     skip, skip + n))
+
+    def make(rw):
+        cfg = dataclasses.replace(get_config("qwen3-8b").reduced(),
+                                  vocab_size=64)
+        cfg = cfg.with_butterfly(layer=1, d_r=d_r, wire_bits=8,
+                                 rate_weight=rw)
+        built = M.build(cfg)
+        step = jax.jit(make_train_step(
+            built, AdamWConfig(lr=constant_schedule(3e-3))))
+        return built, step
+
+    def run(step, params, skip):
+        opt = adamw_init(params)
+        for raw in batches(skip, steps):
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            params, opt, _ = step(params, opt, batch)
+        return params
+
+    def boundary_codes(params, built, batch):
+        x = M._embed_inputs(params, built, batch)
+        x, _, _ = tfm.apply_stage(
+            list(built.stages[0]), params["stages"][0], x, cfg=built.cfg,
+            pctx=M.LOCAL, mode="train", stage_cache=None, pos=None,
+            enc_out=None, shared_params=params.get("shared_attn"),
+            use_kernel=False)
+        codes, _ = bf_lib.reduce_unit(params["butterfly"], x)
+        return np.asarray(codes).reshape(-1, d_r)
+
+    def eval_loss(params, built):
+        losses = []
+        for raw in batches(steps, 32):
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            logits, _ = M.forward_train(params, built, batch)
+            losses.append(float(M.lm_loss(logits, batch["targets"])))
+        return float(np.mean(losses))
+
+    built0, step0 = make(0.0)
+    built_r, step_r = make(rate_weight)
+    params, _ = M.init_model(jax.random.key(0), built0)
+    prefix = run(step0, params, 0)
+    base = run(step0, prefix, 0)         # epoch 2, rate-free
+    ent = run(step_r, prefix, 0)         # epoch 2, rate-aware
+    base_loss = eval_loss(base, built0)
+    ent_loss = eval_loss(ent, built_r)
+
+    counts = np.zeros((d_r, 256), np.int64)
+    for raw in batches(steps - 8, 8):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        counts += wire_codec.channel_counts(
+            boundary_codes(ent, built_r, batch), 8)
+    prior = wire_codec.WirePrior.from_counts(counts, 8)
+    nbytes, rows = 0, 0
+    for raw in batches(steps, 8):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        codes = boundary_codes(ent, built_r, batch)
+        nbytes += len(wire_codec.encode(codes, prior)) + 4 * codes.shape[0]
+        rows += codes.shape[0]
+    ent_bpt = nbytes / rows
+    int8_bpt = float(d_r + 4)            # codes + one f32 scale per row
+    return {"d_r": d_r, "rate_weight": rate_weight,
+            "train_steps": 2 * steps,
+            "int8_bytes_per_token": round(int8_bpt, 2),
+            "entropy_bytes_per_token": round(ent_bpt, 2),
+            "entropy_bytes_reduction": round(int8_bpt / ent_bpt, 2),
+            "eval_loss_base": round(base_loss, 4),
+            "eval_loss_entropy": round(ent_loss, 4),
+            "eval_loss_delta_pct": round(
+                100.0 * (ent_loss - base_loss) / base_loss, 2)}
+
+
 def bench_runtime():
     """Split-serving runtime: cloud-only (raw upload) vs the butterfly split
     under identical Poisson traffic, a streamed vs cache-handoff decode
@@ -305,7 +406,9 @@ def bench_runtime():
     topology scenario (heterogeneous fleets on per-cell radios vs the same
     fleet through one shared 3g wire, per-cell controllers diverging), and a
     resilience scenario (the same topology under a chaos fault schedule —
-    availability, tail latency and migration/retry counts vs the calm run).
+    availability, tail latency and migration/retry counts vs the calm run),
+    and an entropy-wire scenario (trained-prior codec economics plus the
+    four wire/transport configs on one long-prompt trace).
     Emits one JSON document (runtime/json row) with the full comparison."""
     import dataclasses
 
@@ -586,6 +689,63 @@ def bench_runtime():
           f"shared_3g_p50={topo['shared_3g_wire']['latency_p50_ms']:.2f}ms "
           f"({topo['isolated_vs_shared_p50_speedup']}x slower than "
           f"per-cell radios)")
+    # wire: the learned entropy-coded wire.  Part A prices the codec with
+    # a trained per-channel prior (real encoder, held-out codes); Part B
+    # replays one long-prompt 3g trace through the four wire/transport
+    # configurations.  The trace runs a deeper model against a slow cloud
+    # (12 layers, cloud at 0.5x edge) so prefill compute is substantial —
+    # the regime where the progressive transport's upload/prefill overlap
+    # pays; on shallow/fast-cloud workloads the 4-byte refinement header
+    # is all you see.
+    wt0 = time.perf_counter()
+    codec = _wire_codec_report()
+    wire_cfg = dataclasses.replace(cfg, num_layers=12)
+    wire_arrivals = poisson_arrivals(num_devices=4, num_requests=24,
+                                     arrival_rate=4.0, prompt_len=128,
+                                     vocab_size=cfg.vocab_size, seed=0)
+    wire_base = SimConfig(
+        cfg=wire_cfg, mode="split", network="3g", num_devices=4,
+        num_requests=24, arrival_rate=4.0, prompt_len=128, max_new_tokens=8,
+        d_r=16, numerics=False, seed=0, edge=JETSON_TX2,
+        cloud=JETSON_TX2.scaled(0.5, "cloud_slice"), arrivals=wire_arrivals)
+    wire_modes = {}
+    for label, wm, tp in (("int8", "int8", "streamed"),
+                          ("int4", "int4", "streamed"),
+                          ("entropy", "entropy", "streamed"),
+                          ("entropy_progressive", "entropy", "progressive")):
+        s = Simulation(dataclasses.replace(
+            wire_base, wire_mode=wm, transport=tp)).run().summary()
+        row = {"mean_wire_kb": round(s["mean_wire_kb"], 3),
+               "ttft_p50_ms": round(s["ttft_p50_ms"], 3),
+               "latency_p50_ms": round(s["latency_p50_ms"], 3)}
+        if "compression_ratio" in s:
+            row["compression_ratio"] = round(s["compression_ratio"], 3)
+        wire_modes[label] = row
+    prog_ttft_speedup = round(wire_modes["entropy"]["ttft_p50_ms"] /
+                              wire_modes["entropy_progressive"]["ttft_p50_ms"],
+                              3)
+    wire = {"codec": codec,
+            "workload": {"network": "3g", "prompt_len": 128,
+                         "max_new_tokens": 8, "layers": 12, "cloud_x": 0.5,
+                         "requests": 24},
+            "modes": wire_modes,
+            "progressive_ttft_p50_speedup": prog_ttft_speedup,
+            "progressive_latency_p50_speedup": round(
+                wire_modes["entropy"]["latency_p50_ms"] /
+                wire_modes["entropy_progressive"]["latency_p50_ms"], 3)}
+    # acceptance floors (ISSUE 10): >=2x coded bytes at <2% eval-loss
+    # delta, and the overlap must actually buy first-token latency
+    assert codec["entropy_bytes_reduction"] >= 2.0, codec
+    assert codec["eval_loss_delta_pct"] < 2.0, codec
+    assert prog_ttft_speedup > 1.0, wire
+    result["wire"] = wire
+    print(f"runtime/wire,{(time.perf_counter() - wt0) * 1e6 / 6:.0f},"
+          f"codec={codec['entropy_bytes_per_token']:.1f}B/tok vs "
+          f"int8={codec['int8_bytes_per_token']:.0f}B/tok "
+          f"({codec['entropy_bytes_reduction']:.2f}x) "
+          f"dloss={codec['eval_loss_delta_pct']:+.2f}% "
+          f"prog_ttft={prog_ttft_speedup:.3f}x "
+          f"prog_p50={wire['progressive_latency_p50_speedup']:.3f}x")
     print(f"runtime/json,0,{json.dumps(result, sort_keys=True)}")
     _append_runtime_artifact(result)
 

@@ -20,7 +20,7 @@ from collections import defaultdict
 # runtime-table job runs this script without PYTHONPATH=src, so it must not
 # import repro; tests/test_observability.py cross-checks the two stay in
 # sync).  None covers trajectory runs recorded before the field existed.
-KNOWN_SCHEMA_VERSIONS = (None, 2, 3, 4)
+KNOWN_SCHEMA_VERSIONS = (None, 2, 3, 4, 5)
 
 ARCH_ORDER = ["qwen3-14b", "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b",
               "pixtral-12b", "whisper-base", "gemma-7b", "gemma3-12b",
@@ -316,6 +316,36 @@ def print_runtime(path: str = RUNTIME_JSON, require: bool = False):
               f"({gw['shed_interactive_p99_speedup']}x); "
               f"{gw['n_shed']} shed, all batch "
               f"({gw['n_shed_interactive']} interactive)")
+    wire = last.get("wire")
+    if wire:
+        codec = wire.get("codec", {})
+        w = wire.get("workload", {})
+        print(f"\n#### Entropy-coded wire (schema v5: trained prior, "
+              f"d_r={codec.get('d_r', '?')})\n")
+        print(f"codec: {codec.get('entropy_bytes_per_token', float('nan')):.2f}"
+              f"B/token entropy vs "
+              f"{codec.get('int8_bytes_per_token', float('nan')):.2f}B/token "
+              f"int8 ({codec.get('entropy_bytes_reduction', '?')}x fewer "
+              f"bytes) at {codec.get('eval_loss_delta_pct', float('nan')):.2f}"
+              f"% eval-loss delta")
+        print(f"\n| wire mode | uplink/req | ttft p50 | p50 | compression |")
+        print("|---|---|---|---|---|")
+        for mode in ("int8", "int4", "entropy", "entropy_progressive"):
+            row = wire.get("modes", {}).get(mode)
+            if row is None:
+                continue
+            ratio = row.get("compression_ratio")
+            ratio_s = f"{ratio:.2f}x" if _finite(ratio) else "-"
+            print(f"| {mode} | {row['mean_wire_kb']:.2f}kB "
+                  f"| {row['ttft_p50_ms']:.2f}ms "
+                  f"| {row['latency_p50_ms']:.2f}ms | {ratio_s} |")
+        spd = wire.get("progressive_ttft_p50_speedup")
+        if spd is not None:
+            print(f"\nprogressive upload/prefill overlap: {spd}x faster ttft "
+                  f"p50 than non-progressive entropy on the "
+                  f"{w.get('network', '?')} long-prompt trace "
+                  f"(S={w.get('prompt_len', '?')}, "
+                  f"T={w.get('max_new_tokens', '?')})")
     if len(runs) > 1:
         print("\n#### Perf trajectory (split int8 on 3g, per run)\n")
         for r in runs:

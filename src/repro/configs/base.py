@@ -53,10 +53,16 @@ class ButterflyConfig:
     ``layer`` — the butterfly is placed after this many layers (the boundary
     between the edge stage and the cloud stage).  ``d_r`` — reduced channel
     (d_model) size.  ``wire_bits`` — wire quantization (paper: 8).
+    ``rate_weight`` — weight of the entropy-rate term (expected coded
+    bits/symbol of the wire codes, ``wire_codec.rate_bits``) in the training
+    loss; 0 disables it (the fixed-rate baseline).  BottleNet-style: the
+    reduce projection learns low-entropy codes the rANS wire codec can
+    actually exploit.
     """
     layer: int
     d_r: int
     wire_bits: int = 8
+    rate_weight: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -109,8 +115,11 @@ class ModelConfig:
     def q_per_kv(self) -> int:
         return self.num_heads // self.num_kv_heads
 
-    def with_butterfly(self, layer: int, d_r: int, wire_bits: int = 8) -> "ModelConfig":
-        return replace(self, butterfly=ButterflyConfig(layer=layer, d_r=d_r, wire_bits=wire_bits))
+    def with_butterfly(self, layer: int, d_r: int, wire_bits: int = 8,
+                       rate_weight: float = 0.0) -> "ModelConfig":
+        return replace(self, butterfly=ButterflyConfig(
+            layer=layer, d_r=d_r, wire_bits=wire_bits,
+            rate_weight=rate_weight))
 
     def reduced(self) -> "ModelConfig":
         """Smoke-test variant of the same family: 2 layers, d_model<=512, <=4 experts."""

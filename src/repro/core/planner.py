@@ -233,7 +233,15 @@ def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
     "reduced" butterfly reduction, no wire quantization
     "int8"    the paper: int8 codes + per-row f32 scales
     "int4"    beyond-paper: nibble-packed codes (2/byte) + f32 scales
+    "entropy" int8 codes rANS-coded against the learned per-channel prior
+              (predicted at the trained-prior nominal rate; the runtime
+              charges *actual* coded bytes when real codes exist), raw f32
+              scales, plus the per-payload stream overhead.  Never predicted
+              worse than int8: the edge ships raw codes when coding would
+              expand the payload — which is why single decode rows stay
+              fixed-rate int8 (the ~12 B/lane state flush dwarfs them).
     """
+    from repro.core import wire_codec
     from repro.core.quantization import wire_bytes
 
     act_bytes = 2 if cfg.dtype == "bfloat16" else 4
@@ -245,6 +253,11 @@ def wire_mode_bytes(cfg, seq: int, d_r: int, wire_mode: str,
         return float(wire_bytes((batch, seq, d_r), 8))
     if wire_mode == "int4":
         return float(wire_bytes((batch, seq, d_r), 4))
+    if wire_mode == "entropy":
+        n = batch * seq * d_r
+        coded = wire_codec.predicted_code_bytes(n) \
+            + wire_codec.payload_overhead_bytes(d_r)
+        return float(min(coded, n) + batch * seq * 4)
     raise ValueError(f"unknown wire_mode {wire_mode!r}")
 
 
@@ -283,6 +296,11 @@ def select_split_online(cfg, seq: int, d_r: int, *,
       pipeline) the per-token cadence is the *slowest stage* — max(edge
       step, wire row + id, cloud step) — instead of their sum, because the
       edge computes microbatch k+1 while the cloud serves microbatch k.
+    * ``progressive`` is ``streamed`` with a bitplane-split prefill upload:
+      the coarse chunk (high-order planes + scales) ships first, cloud
+      prefill starts on it, and the refinement tail of the upload overlaps
+      that prefill — TTFT pays max(refine, cloud prefill) instead of their
+      sum.  Decode then streams rows exactly like ``streamed``.
 
     ``objective`` names a registered selection objective
     (:data:`SELECTION_OBJECTIVES`): ``latency``, ``energy``, or
@@ -350,6 +368,27 @@ def select_split_online(cfg, seq: int, d_r: int, *,
                     cadence = rtt
                 edge_total = t_edge + (T - 1) * t_edge_step
                 lat = t_edge + t_up + t_cloud + token_down_s + \
+                    (T - 1) * cadence
+            elif tp == "progressive":
+                from repro.core import wire_codec
+                scale_bytes = seq * 4
+                code_bytes = max(int(base_wire) - scale_bytes, 0)
+                coarse, refine = wire_codec.split_coarse_refine(
+                    code_bytes, scale_bytes)
+                wire = float(coarse + refine) + (T - 1) * row_bytes
+                t_up = (coarse + refine) / link_bps
+                rtt = t_edge_step + row_bytes / link_bps + t_cloud_step + \
+                    token_down_s
+                if pipeline_depth >= 2:
+                    cadence = max(t_edge_step, t_cloud_step,
+                                  row_bytes / link_bps + token_down_s)
+                else:
+                    cadence = rtt
+                edge_total = t_edge + (T - 1) * t_edge_step
+                # cloud prefill overlaps the refinement tail of the upload;
+                # the first token waits for whichever finishes last
+                lat = t_edge + coarse / link_bps + \
+                    max(refine / link_bps, t_cloud) + token_down_s + \
                     (T - 1) * cadence
             else:
                 raise ValueError(f"unknown transport {tp!r}")

@@ -63,6 +63,65 @@ def butterfly_reduce_quant_kernel(x, w_reduce, *, bits: int = 8,
     )(x, w_reduce)
 
 
+def _reduce_quant_bincount_kernel(x_ref, w_ref, codes_ref, scales_ref,
+                                  counts_ref, *, qmax: int, nsym: int):
+    """Reduce+quant epilogue plus a per-channel symbol histogram, accumulated
+    across the token grid into a single fixed-index (d_r, nsym) output — the
+    codes never leave VMEM between quantization and counting, so the edge
+    gets its entropy estimate for free in the same pass."""
+    x = x_ref[...]
+    w = w_ref[...]
+    r = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (TM, d_r) f32, MXU
+    absmax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(r / scale), -qmax - 1, qmax)
+    codes_ref[...] = codes.astype(jnp.int8)
+    scales_ref[...] = scale
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sym = codes.astype(jnp.int32) + (qmax + 1)            # (TM, d_r) in [0, nsym)
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nsym), 2)
+    onehot = (sym[:, :, None] == ks).astype(jnp.int32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)            # (d_r, nsym)
+
+
+def butterfly_reduce_quant_bincount_kernel(x, w_reduce, *, bits: int = 8,
+                                           block_t: int = 256,
+                                           interpret: bool = False):
+    """x: (T, d), w_reduce: (d, d_r); T % block_t == 0.  Returns
+    (codes (T, d_r) int8, scales (T, 1) f32, counts (d_r, 2**bits) int32)."""
+    T, d = x.shape
+    d_r = w_reduce.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    qmax = 2 ** (bits - 1) - 1
+    nsym = 1 << bits
+    grid = (T // block_t,)
+    return pl.pallas_call(
+        functools.partial(_reduce_quant_bincount_kernel, qmax=qmax, nsym=nsym),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_r), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d_r), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d_r, nsym), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, d_r), jnp.int8),
+            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_r, nsym), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, w_reduce)
+
+
 def _dequant_restore_norm_kernel(codes_ref, scales_ref, w_ref, nw_ref,
                                  x_ref, h_ref, *, eps: float):
     """Dequant + restore matmul + the first cloud layer's input RMSNorm in

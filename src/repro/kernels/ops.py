@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.butterfly_kernel import (
     butterfly_dequant_restore_kernel,
     butterfly_dequant_restore_norm_kernel,
+    butterfly_reduce_quant_bincount_kernel,
     butterfly_reduce_quant_kernel,
 )
 from repro.kernels.flash_attention import flash_attention_kernel
@@ -83,6 +84,48 @@ def butterfly_reduce_quant(x, w_reduce, *, bits: int = 8,
     if pad_t:
         codes, scales = codes[:T], scales[:T]
     return codes.reshape(*shape[:-1], d_r), scales.reshape(*shape[:-1], 1)
+
+
+def _channel_bincount(codes, qmax: int, nsym: int):
+    sym = codes.astype(jnp.int32) + (qmax + 1)
+    ks = jnp.arange(nsym, dtype=jnp.int32)[None, None, :]
+    return jnp.sum((sym[:, :, None] == ks).astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t"))
+def butterfly_reduce_quant_bincount(x, w_reduce, *, bits: int = 8,
+                                    block_t: int = 256):
+    """Fused reduce+quant+entropy-histogram: x (..., d) ->
+    (codes (..., d_r) int8, scales (..., 1) f32, counts (d_r, 2**bits) i32).
+
+    ``counts`` is the per-channel symbol histogram of the emitted codes —
+    the input ``wire_codec.estimate_coded_bytes`` needs to predict the
+    entropy-coded payload size on-device, produced in the same VMEM
+    residency as the codes themselves.  Codes/scales are bitwise identical
+    to ``butterfly_reduce_quant``."""
+    assert bits <= 8, "fused codec emits int8 codes; wider wires go eager"
+    shape = x.shape
+    d = shape[-1]
+    d_r = w_reduce.shape[1]
+    qmax = 2 ** (bits - 1) - 1
+    nsym = 1 << bits
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    if T <= _FAST_PATH_ROWS:                   # (B, 1, d) decode-row fast path
+        codes, scales = _reduce_quant_rows(xf, w_reduce, qmax)
+        counts = _channel_bincount(codes, qmax, nsym)
+        return (codes.reshape(*shape[:-1], d_r),
+                scales.reshape(*shape[:-1], 1), counts)
+    block = decode_row_block(T, block_t)
+    xf, pad_t = _pad_to(xf, block, 0)
+    codes, scales, counts = butterfly_reduce_quant_bincount_kernel(
+        xf, w_reduce, bits=bits, block_t=block, interpret=interpret_mode())
+    if pad_t:
+        codes, scales = codes[:T], scales[:T]
+        # pad rows are all-zero -> they quantize to code 0 (symbol qmax+1)
+        # in every channel; remove exactly those counts.
+        counts = counts.at[:, qmax + 1].add(-pad_t)
+    return codes.reshape(*shape[:-1], d_r), scales.reshape(*shape[:-1], 1), counts
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "block_t"))
@@ -176,6 +219,7 @@ def rmsnorm_ref(x, w, eps: float = 1e-6):
 
 # reference aliases (oracles)
 butterfly_reduce_quant_ref = ref.butterfly_reduce_quant_ref
+butterfly_reduce_quant_bincount_ref = ref.butterfly_reduce_quant_bincount_ref
 butterfly_dequant_restore_ref = ref.butterfly_dequant_restore_ref
 butterfly_restore_norm_ref = ref.butterfly_restore_norm_ref
 flash_attention_ref = ref.flash_attention_ref

@@ -18,6 +18,20 @@ def butterfly_reduce_quant_ref(x, w_reduce, bits: int = 8):
     return codes, scale
 
 
+def butterfly_reduce_quant_bincount_ref(x, w_reduce, bits: int = 8):
+    """Unfused oracle for the quant+bincount kernel: reduce_quant, then a
+    per-channel histogram of the symbol view (code + qmax + 1) of the codes.
+    Returns (codes (T, d_r) int8, scales (T, 1) f32, counts (d_r, 2**bits)
+    int32)."""
+    qmax = 2 ** (bits - 1) - 1
+    nsym = 1 << bits
+    codes, scales = butterfly_reduce_quant_ref(x, w_reduce, bits)
+    sym = codes.astype(jnp.int32) + (qmax + 1)
+    ks = jnp.arange(nsym, dtype=jnp.int32)[None, None, :]
+    counts = jnp.sum((sym[:, :, None] == ks).astype(jnp.int32), axis=0)
+    return codes, scales, counts
+
+
 def butterfly_dequant_restore_ref(codes, scales, w_restore, out_dtype=jnp.float32):
     """codes: (T, d_r) int8, scales (T, 1) -> (T, d)."""
     r = codes.astype(jnp.float32) * scales

@@ -71,17 +71,27 @@ def main():
     ap.add_argument("--mode", choices=("split", "cloud", "edge"),
                     default="split")
     ap.add_argument("--wire-mode",
-                    choices=("raw", "reduced", "int8", "int4"),
-                    default="int8")
+                    choices=("raw", "reduced", "int8", "int4", "entropy"),
+                    default="int8",
+                    help="entropy = int8 codes rANS-coded against the "
+                         "learned per-channel prior (core/wire_codec; "
+                         "lossless, so numerics match int8 bitwise); "
+                         "payload bytes become data-dependent and telemetry "
+                         "gains coded_bytes/compression_ratio")
     ap.add_argument("--transport",
-                    choices=("cache_handoff", "streamed", "auto"),
+                    choices=("cache_handoff", "streamed", "progressive",
+                             "auto"),
                     default="cache_handoff",
                     help="decode transport for multi-token split requests: "
                          "cache_handoff ships the edge stage-0 KV cache up "
                          "front; streamed keeps it on the edge and sends one "
                          "int8 (1, d_r) row per generated token (DESIGN.md "
-                         "section 8.6); auto lets each cell's adaptive "
-                         "controller pick per request (requires --adapt)")
+                         "section 8.6); progressive is streamed with a "
+                         "bitplane-split prefill upload (cloud prefill "
+                         "starts on the coarse planes and overlaps the "
+                         "refinement tail, DESIGN.md section 18); auto lets "
+                         "each cell's adaptive controller pick per request "
+                         "(requires --adapt)")
     ap.add_argument("--network", default="3g",
                     choices=("3g", "4g", "wifi", "inter_pod"))
     ap.add_argument("--duplex", choices=("split", "shared"), default="split",

@@ -190,9 +190,17 @@ def _run_stages(params, built: BuiltModel, x, *, mode, pctx, caches, pos,
     cfg = built.cfg
     shared = params.get("shared_attn")
     aux_total = jnp.zeros((2,), jnp.float32)
+    rate = jnp.float32(0.0)
     new_caches = []
     for stage_idx, segs in enumerate(built.stages):
         if stage_idx == 1:
+            if train and cfg.butterfly.rate_weight > 0:
+                # entropy-rate of the wire codes under the codec prior;
+                # recomputes the (cheap, d_r-wide) reduce matmul so the
+                # serving-path apply_butterfly signature stays untouched
+                from repro.core.wire_codec import rate_bits
+                rate = rate_bits(x @ params["butterfly"]["w_reduce"],
+                                 bits=cfg.butterfly.wire_bits)
             x = bf_lib.apply_butterfly(params["butterfly"], x,
                                        wire_bits=cfg.butterfly.wire_bits,
                                        train=train, use_kernel=use_kernel)
@@ -203,7 +211,7 @@ def _run_stages(params, built: BuiltModel, x, *, mode, pctx, caches, pos,
             shared_params=shared, use_kernel=use_kernel)
         new_caches.append(nc)
         aux_total = aux_total + aux
-    return x, new_caches, aux_total
+    return x, new_caches, aux_total, rate
 
 
 # ---------------------------------------------------------------------------
@@ -218,11 +226,12 @@ def forward_train(params, built: BuiltModel, batch: dict,
     if cfg.is_encdec:
         enc_out = _encode(params, built, batch["frames"], pctx, use_kernel)
     x = _embed_inputs(params, built, batch)
-    x, _, aux = _run_stages(params, built, x, mode="train", pctx=pctx,
-                            caches=None, pos=None, enc_out=enc_out,
-                            use_kernel=use_kernel, train=True)
+    x, _, aux, rate = _run_stages(params, built, x, mode="train", pctx=pctx,
+                                  caches=None, pos=None, enc_out=enc_out,
+                                  use_kernel=use_kernel, train=True)
     logits = _logits(params, built, x)
-    return logits, {"load_balance": aux[0], "router_z": aux[1]}
+    return logits, {"load_balance": aux[0], "router_z": aux[1],
+                    "wire_rate_bits": rate}
 
 
 def forward_prefill(params, built: BuiltModel, batch: dict,
@@ -232,9 +241,9 @@ def forward_prefill(params, built: BuiltModel, batch: dict,
     if cfg.is_encdec:
         enc_out = _encode(params, built, batch["frames"], pctx, use_kernel)
     x = _embed_inputs(params, built, batch)
-    x, caches, _ = _run_stages(params, built, x, mode="prefill", pctx=pctx,
-                               caches=None, pos=None, enc_out=enc_out,
-                               use_kernel=use_kernel, train=False)
+    x, caches, _, _ = _run_stages(params, built, x, mode="prefill", pctx=pctx,
+                                  caches=None, pos=None, enc_out=enc_out,
+                                  use_kernel=use_kernel, train=False)
     logits = _logits(params, built, x[:, -1:])
     return logits, caches
 
@@ -255,9 +264,10 @@ def forward_decode(params, built: BuiltModel, tokens, caches, pos,
     else:
         scale = cfg.arch_type == "dense" and cfg.act == "gelu"
         x = embed(params["embed"], tokens, scale=scale)
-    x, new_caches, _ = _run_stages(params, built, x, mode="decode", pctx=pctx,
-                                   caches=caches, pos=pos, enc_out=None,
-                                   use_kernel=use_kernel, train=False)
+    x, new_caches, _, _ = _run_stages(params, built, x, mode="decode",
+                                      pctx=pctx, caches=caches, pos=pos,
+                                      enc_out=None, use_kernel=use_kernel,
+                                      train=False)
     logits = _logits(params, built, x)
     return logits, new_caches
 

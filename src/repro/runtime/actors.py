@@ -60,6 +60,11 @@ class SimRequest:
     last_token: int = -1
     produced: int = 0                         # ids RECEIVED at the mobile
     stream_t0: Optional[float] = None         # RTT accounting anchor
+    # progressive-transport state: the refinement bitplanes have landed
+    # (always True outside progressive), and the first sampled token held
+    # back while they were still in flight
+    refine_done: bool = True
+    gated_token: Optional[int] = None
     # fault/recovery state machine (runtime/faults.py) — inert without an
     # injector: home mirrors the arrival device, state advances, and the
     # rest stays at its default
@@ -183,16 +188,19 @@ class EdgeDevice:
         transport = get_transport(t.transport)
         nbytes = transport.prefill_uplink_bytes(self, req)
         t.wire_bytes += nbytes
-        start, done = self.uplink.transfer(nbytes, self.loop.now, uid=t.uid,
-                                           tag="prefill")
+        if transport.name == "progressive" and self.mode == "split":
+            start, done = self._send_progressive(req, nbytes)
+        else:
+            start, done = self.uplink.transfer(nbytes, self.loop.now,
+                                               uid=t.uid, tag="prefill")
+            self.loop.schedule_at(done, lambda: self.server.on_payload(req),
+                                  owner=self.uplink)
         t.t_uplink_start, t.t_uplink_done = start, done
         t.mobile_energy_mj += self.uplink.transfer_energy_mj(nbytes)
         if first and self.tracer.enabled:
             self.tracer.async_span(f"req/{self.cell}", "uplink_wait", t.uid,
                                    t.t_edge_done, start)
         req.state = "uplink"
-        self.loop.schedule_at(done, lambda: self.server.on_payload(req),
-                              owner=self.uplink)
         gw = self.server.gateway
         if first and gw is not None and gw.wants_hedge(req):
             gw.arm_hedge(self, req)
@@ -200,6 +208,41 @@ class EdgeDevice:
             self.injector.arm(
                 req, lambda: self.server.device_for(req).send_payload(req),
                 "payload")
+
+    def _send_progressive(self, req: SimRequest, nbytes: float) -> tuple:
+        """Two back-to-back FIFO uplink chunks: the coarse bitplanes plus
+        scales first, the refinement planes right behind.  ``on_payload``
+        fires at the COARSE landing — the cloud prefill overlaps the
+        refinement tail — and the refine landing unfreezes the first
+        token.  ``t_uplink_done`` stamps the coarse landing (when the
+        cloud can start), keeping the breakdown chain monotone; the tail
+        overlaps the cloud_queue/cloud legs."""
+        from repro.core import wire_codec
+
+        t = req.trace
+        now = self.loop.now
+        scale_bytes = t.prompt_len * 4
+        code_bytes = max(int(nbytes) - scale_bytes, 0)
+        coarse, refine = wire_codec.split_coarse_refine(code_bytes,
+                                                        scale_bytes)
+        # the two-chunk split costs a second stream header beyond the
+        # single-shot payload: count what actually crosses the wire
+        t.wire_bytes += (coarse + refine) - float(nbytes)
+        start, c_done = self.uplink.transfer(coarse, now, uid=t.uid,
+                                             tag="prefill")
+        _, r_done = self.uplink.transfer(refine, now, uid=t.uid,
+                                         tag="refine")
+        req.refine_done = False
+        self.loop.schedule_at(c_done, lambda: self.server.on_payload(req),
+                              owner=self.uplink)
+        self.loop.schedule_at(r_done, lambda: self._refine_landed(req),
+                              owner=self.uplink)
+        return start, c_done
+
+    def _refine_landed(self, req: SimRequest) -> None:
+        if req.finished:
+            return
+        get_transport("progressive").release_gated(self.server, req)
 
     def restart_prefill(self, req: SimRequest) -> None:
         """Migration target: redo the edge prefill for a request whose home
@@ -404,10 +447,12 @@ class CloudServer:
 
     @property
     def num_decoding(self) -> int:
-        """Slots decoding locally (cache handoff); streamed slots wait for
-        rows from the edge and take no batched decode turns."""
+        """Slots decoding locally (cache handoff); token-streaming slots
+        (streamed/progressive) wait for rows from the edge and take no
+        batched decode turns."""
         return sum(1 for r in self.slots
-                   if r is not None and r.trace.transport != "streamed")
+                   if r is not None and
+                   not get_transport(r.trace.transport).streams_tokens)
 
     def current_load(self, now: float) -> float:
         """Combined congestion the mobile observes when it pings the server:
@@ -617,6 +662,9 @@ class CloudServer:
         self.loop.schedule(dur, lambda: self._stream_turn_done(batch))
 
     def _stream_turn_done(self, batch: List[SimRequest]) -> None:
+        # progressive inherits the streamed row service unchanged (the
+        # coarse/refine choreography only touches the prefill upload), so
+        # one singleton serves mixed batches without reordering the turn
         get_transport("streamed").serve_rows(self, batch)
         self.loop.schedule(0.0, self._service)
 
@@ -632,7 +680,8 @@ class CloudServer:
 
     def _decode_done(self) -> None:
         handoff = [r for r in self.slots
-                   if r is not None and r.trace.transport != "streamed"]
+                   if r is not None and
+                   not get_transport(r.trace.transport).streams_tokens]
         if self.bank is not None:
             stepped = set()
             for req in handoff:

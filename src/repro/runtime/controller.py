@@ -52,8 +52,10 @@ class AdaptiveSplitController:
                  get_transport: Optional[Callable[[], str]] = None,
                  edge_mp: int = 1, cloud_mp: int = 1,
                  cell: str = "cell0", tracer=NULL_TRACER):
-        assert transport_mode in ("cache_handoff", "streamed", "auto"), \
-            transport_mode
+        # "auto" keeps scoring the classic pair; "progressive" is explicitly
+        # selectable so existing auto-routed trajectories stay byte-identical
+        assert transport_mode in ("cache_handoff", "streamed", "progressive",
+                                  "auto"), transport_mode
         self.handoff_bytes_per_layer = handoff_bytes_per_layer
         self.cell = cell
         self.slo_s = slo_s

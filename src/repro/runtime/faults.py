@@ -335,7 +335,7 @@ class FaultInjector:
                     c.restore(r)
                     r.checkpoint = None
                     from repro.runtime.transports import get_transport
-                    get_transport("streamed")._schedule_edge_step(d, r)
+                    get_transport(r.trace.transport)._schedule_edge_step(d, r)
 
                 self.loop.schedule(pol.migration_delay_s, resume, owner=tgt)
             elif req.state == "edge_fallback":

@@ -468,8 +468,8 @@ def trace_arrivals(path: str) -> List[Arrival]:
 class SimConfig:
     cfg: object                              # ModelConfig (butterfly optional)
     mode: str = "split"                      # split | cloud | edge
-    wire_mode: str = "int8"                  # raw | reduced | int8 | int4
-    transport: str = "cache_handoff"         # cache_handoff | streamed | auto
+    wire_mode: str = "int8"                  # raw | reduced | int8 | int4 | entropy
+    transport: str = "cache_handoff"         # cache_handoff | streamed | progressive | auto
     network: str = "3g"                      # 3g | 4g | wifi | inter_pod
     duplex: str = "split"                    # split | shared downlink FIFO
     num_devices: int = 4
@@ -542,8 +542,8 @@ class Simulation:
             if overrides:
                 c = replace(c, **overrides)
         assert c.mode in ("split", "cloud", "edge"), c.mode
-        assert c.transport in ("cache_handoff", "streamed", "auto"), \
-            c.transport
+        assert c.transport in ("cache_handoff", "streamed", "progressive",
+                               "auto"), c.transport
         if c.transport == "auto":
             assert c.adapt and c.mode == "split", \
                 "transport='auto' needs the adaptive controller (split mode)"
@@ -588,7 +588,8 @@ class Simulation:
                 f"cell {spec.name}: initial split {split} not in " \
                 f"{self.candidates}"
             tp_mode = spec.transport or c.transport
-            assert tp_mode in ("cache_handoff", "streamed", "auto"), tp_mode
+            assert tp_mode in ("cache_handoff", "streamed", "progressive",
+                               "auto"), tp_mode
             cost = CostModel(base, spec.hardware(), c.cloud,
                              edge_mp=spec.edge_mp, cloud_mp=c.cloud_mp)
             self.cells.append(Cell(

@@ -219,7 +219,11 @@ class SplitModelBank:
         from repro.models import transformer as tfm
 
         assert base_cfg.num_layers >= 2, "need >=2 layers to split"
-        assert wire_mode in ("raw", "reduced", "int8", "int4"), wire_mode
+        # "entropy" is numerically int8 — the rANS coding of the codes is
+        # lossless, so the in-graph halves are shared with the int8 wire and
+        # only byte accounting / transport choreography differ (wire_codec)
+        assert wire_mode in ("raw", "reduced", "int8", "int4", "entropy"), \
+            wire_mode
         if wire_mode == "int4":
             assert d_r % 2 == 0, "int4 wire packs two codes per byte"
         if base_cfg.butterfly is not None:
@@ -829,8 +833,8 @@ class SplitRunner:
         cached in the bank's compile cache under the wire signature."""
         import jax
         bank = self.bank
-        assert bank.wire_mode in ("int8", "int4"), \
-            "decode pipeline wires quantized codes (int8/int4)"
+        assert bank.wire_mode in ("int8", "int4", "entropy"), \
+            "decode pipeline wires quantized codes (int8/int4/entropy)"
         key = ("decode_pipeline", self.split, id(mesh), num_microbatches,
                prompt_len, microbatch, new_tokens, bool(pipelined),
                bool(use_kernel), bool(overlap_psum)) + bank._wire_sig

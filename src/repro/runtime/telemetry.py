@@ -26,8 +26,11 @@ from repro.runtime.metrics import MetricsRegistry
 # serving gateway (runtime/gateway.py): per-request SLO class
 # (slo_class/hedges/cache_hit on the trace), the "shed" outcome with
 # conservation counts (n_done + n_failed + n_shed == n_requests), and the
-# per-class "classes" aggregate section.
-SCHEMA_VERSION = 4
+# per-class "classes" aggregate section.  v5 = the entropy-coded wire
+# (core/wire_codec.py): per-trace coded_bytes/nominal_bytes accounting plus
+# the summary's compression_ratio / mean_coded_bytes_per_token — the trace
+# fields are zero and the summary keys absent outside wire_mode="entropy".
+SCHEMA_VERSION = 5
 
 
 @dataclass
@@ -43,6 +46,14 @@ class RequestTrace:
     new_tokens: int = 0
     wire_bytes: float = 0.0            # uplink bytes (codes, cache, rows)
     downlink_bytes: float = 0.0        # sampled token ids back to the mobile
+    # entropy-wire accounting (schema v5) — both stay 0.0 outside
+    # wire_mode="entropy", so fixed-rate runs serialize identically modulo
+    # the keys.  coded counts the rANS prefill payloads actually charged to
+    # the wire (real encoder size in numerics mode, the nominal-rate
+    # prediction in timing-only runs); nominal is the int8 fixed-rate
+    # equivalent of those same payloads, so nominal/coded is the codec gain
+    coded_bytes: float = 0.0
+    nominal_bytes: float = 0.0
     mobile_energy_mj: float = 0.0
     # streamed-decode loop accounting (one entry per generated token after
     # the first: edge step -> row uplink -> cloud turn -> token downlink)
@@ -223,6 +234,17 @@ class Telemetry:
                 else 0.0
             out["mean_mobile_energy_mj"] = sum(
                 t.mobile_energy_mj for t in self.traces) / len(self.traces)
+            # entropy-wire aggregates (schema v5): emitted only when some
+            # trace carried a coded payload — fixed-rate runs keep their
+            # exact pre-v5 summary (and nan never enters dict comparisons)
+            coded = sum(t.coded_bytes for t in self.traces)
+            if coded > 0:
+                nominal = sum(t.nominal_bytes for t in self.traces)
+                ctoks = sum(t.prompt_len for t in self.traces
+                            if t.coded_bytes > 0)
+                out["compression_ratio"] = nominal / coded
+                out["mean_coded_bytes_per_token"] = coded / ctoks \
+                    if ctoks > 0 else float("nan")
             span = (max(t.t_done for t in done) -
                     min(t.t_arrival for t in done)) if done else 0.0
             # span == 0 (single request, or all requests at one instant)
@@ -350,7 +372,8 @@ class Telemetry:
         """Per-request latency-breakdown table (the CLI's main output)."""
         rows = [" ".join(f"{c:>9s}" for c in self._COLS)]
         for t in self.traces:
-            tport = "stream" if t.transport == "streamed" else "handoff"
+            tport = {"streamed": "stream",
+                     "progressive": "prgrsv"}.get(t.transport, "handoff")
             vals = (t.uid, t.device, t.cell[:9], t.split, tport,
                     t.prompt_len,
                     t.edge_queue_s * 1e3, t.edge_compute_s * 1e3,

@@ -23,6 +23,15 @@ short prompt + fat RTT favors ``cache_handoff``.  The controller can pick
 per request (``transport="auto"``) via the same online selection phase that
 picks the split (core/planner.select_split_online).
 
+``progressive``  (entropy-coded upload/prefill overlap, DESIGN.md section
+18): streamed decode plus a two-chunk prefill upload — the high-order
+coarse bitplanes (and scales) ship first, the refinement planes queue
+right behind on the same FIFO uplink, and the cloud starts its prefill as
+soon as the coarse chunk lands, overlapping the accelerator with the
+upload tail.  The first sampled token is gated on the refinement landing,
+so decode numerics always see the FULL codes — bitwise parity with
+``streamed`` — while TTFT stops paying for the serialized tail.
+
 The transport objects are stateless singletons: they own the per-request
 choreography (what crosses which wire when, who keeps which cache) while
 the actors keep the machinery (serial frontiers, slot pools, batched
@@ -30,9 +39,56 @@ service turns).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
+from repro.core import wire_codec
 from repro.core.costs import TOKEN_BYTES
+
+# deployment-default rANS prior shared by every entropy-wire request of a
+# given width (the same default the codec benchmarks train against); cached
+# because WirePrior.default builds a fresh frequency table per call
+_DEFAULT_PRIORS: dict = {}
+
+
+def _default_prior(d_r: int, bits: int = 8) -> wire_codec.WirePrior:
+    key = (d_r, bits)
+    if key not in _DEFAULT_PRIORS:
+        _DEFAULT_PRIORS[key] = wire_codec.WirePrior.default(d_r, bits)
+    return _DEFAULT_PRIORS[key]
+
+
+def _entropy_payload_adjust(device, req) -> float:
+    """Entropy-wire byte accounting (schema v5): swap the planner's
+    nominal-rate prediction for the ACTUAL rANS size of this request's
+    codes when they exist (numerics mode), stamping the trace's
+    ``coded_bytes``/``nominal_bytes`` fields either way.  Returns the
+    delta to add to the predicted uplink total.  Timing-only runs (no
+    bank) keep the deterministic nominal prediction — delta 0.0 — so
+    record->replay stays byte-identical in both modes (the encoder is a
+    pure function of the codes)."""
+    from repro.core.planner import wire_mode_bytes
+
+    t = req.trace
+    predicted = wire_mode_bytes(device.cost.cfg, t.prompt_len, device.d_r,
+                                "entropy")
+    raw_int8 = wire_mode_bytes(device.cost.cfg, t.prompt_len, device.d_r,
+                               "int8")
+    coded = predicted
+    delta = 0.0
+    if req.payload is not None and req.payload[0] is not None:
+        codes = np.asarray(req.payload[0][0])          # (S, d_r) int8
+        actual = wire_codec.coded_nbytes(
+            codes, _default_prior(device.d_r)) + t.prompt_len * 4
+        # same escape hatch as the planner: the edge ships raw int8 codes
+        # when coding would expand the payload
+        actual = float(min(actual, raw_int8))
+        delta = actual - predicted
+        coded = actual
+    t.coded_bytes += coded
+    t.nominal_bytes += raw_int8
+    return delta
 
 
 class DecodeTransport:
@@ -43,9 +99,12 @@ class DecodeTransport:
 
     def prefill_uplink_bytes(self, device, req) -> float:
         t = req.trace
-        return device.cost.payload_bytes(
+        total = device.cost.payload_bytes(
             device.mode, device.wire_mode, t.prompt_len, device.d_r,
             t.split, req.max_new_tokens, transport=self.name)
+        if device.wire_mode == "entropy" and device.mode == "split":
+            total += _entropy_payload_adjust(device, req)
+        return total
 
     def after_edge_prefill(self, device, req) -> None:
         """Hook between the edge prefill numerics and the uplink."""
@@ -287,9 +346,61 @@ class StreamedTransport(DecodeTransport):
             req, lambda: self.resend_last_token(server, req), "token")
 
 
+class ProgressiveTransport(StreamedTransport):
+    """Streamed decode + progressive prefill upload: coarse bitplanes
+    first, cloud prefill overlapping the refinement tail.
+
+    The edge side (EdgeDevice._send_progressive) splits the prefill
+    payload into two back-to-back FIFO uplink transfers; ``on_payload``
+    fires at the COARSE landing, so the cloud's serial prefill frontier
+    starts ``refine/link`` seconds earlier than under ``streamed``.  The
+    cloud side below runs the exact streamed numerics — the payload object
+    always holds the full-precision codes, so generated ids are bitwise
+    identical to ``streamed`` — but holds the first sampled token until
+    the refinement chunk has landed (``req.refine_done``), keeping the
+    modeled timeline honest: no token can depend on planes still in
+    flight."""
+
+    name = "progressive"
+
+    def start_cloud_decode(self, server, req) -> None:
+        t = req.trace
+        if server.bank is not None:
+            logits_row, cache1, _ = server._cloud_numerics(req)
+            runner = server.bank.runner(t.split)
+            req.cloud_cache = runner.pad_decode_cache(cache1, 1,
+                                                      server.max_len)
+            req.cloud_pos = t.prompt_len
+            eng = server._engine(t.split)
+            req.engine_req = eng.submit_streamed(
+                t.prompt_len, logits_row, max_new_tokens=req.max_new_tokens)
+            req.payload = None
+            tok = int(req.engine_req.generated[0])
+        else:
+            tok = 0
+        if not req.refine_done:
+            # the overlapped prefill beat the refinement tail: hold the
+            # token; the refine-landing event releases it (release_gated)
+            req.gated_token = tok
+            server.telemetry.counters["progressive_gated_tokens"] += 1
+            return
+        self.send_token(server, req, tok)
+
+    def release_gated(self, server, req) -> None:
+        """Refinement landed: unfreeze decode, sending the held first
+        token if the prefill already produced one."""
+        req.refine_done = True
+        if req.finished or req.gated_token is None:
+            return
+        tok = req.gated_token
+        req.gated_token = None
+        self.send_token(server, req, tok)
+
+
 TRANSPORTS = {
     "cache_handoff": CacheHandoffTransport(),
     "streamed": StreamedTransport(),
+    "progressive": ProgressiveTransport(),
 }
 
 

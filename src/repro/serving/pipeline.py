@@ -108,7 +108,10 @@ def make_split_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
     Mmb = num_microbatches
     dt = jnp.dtype(cfg.dtype)
 
-    assert wire_mode in ("raw", "reduced", "int8", "int4"), wire_mode
+    # "entropy" shares the int8 numerics end to end (rANS is lossless over
+    # the codes); it only changes byte accounting outside the graph
+    assert wire_mode in ("raw", "reduced", "int8", "int4", "entropy"), \
+        wire_mode
     if wire_mode == "int4":
         assert d_r % 2 == 0, "int4 wire packs two codes per byte"
     bits = 4 if wire_mode == "int4" else cfg.butterfly.wire_bits
@@ -281,7 +284,7 @@ def make_decode_pipeline(built: M.BuiltModel, mesh, num_microbatches: int,
     T = int(new_tokens)
     Mmb = int(num_microbatches)
     dt = jnp.dtype(cfg.dtype)
-    assert wire_mode in ("int8", "int4"), wire_mode
+    assert wire_mode in ("int8", "int4", "entropy"), wire_mode
     if wire_mode == "int4":
         assert d_r % 2 == 0, "int4 wire packs two codes per byte"
     bits = 4 if wire_mode == "int4" else 8

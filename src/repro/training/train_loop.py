@@ -20,14 +20,18 @@ from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 def make_loss_fn(built: M.BuiltModel, pctx: ParallelContext = LOCAL,
                  use_kernel: bool = False):
+    bf = built.cfg.butterfly
+    rate_weight = bf.rate_weight if bf is not None else 0.0
+
     def loss_fn(params, batch):
         logits, aux = M.forward_train(params, built, batch, pctx, use_kernel)
         # next-token objective: batch["targets"] is already shifted by the
         # data pipeline (targets[t] = tokens[t+1], -1 where masked)
         loss = M.lm_loss(logits, batch["targets"])
-        total = loss + aux["load_balance"] + aux["router_z"]
+        rate = aux["wire_rate_bits"]
+        total = loss + aux["load_balance"] + aux["router_z"] + rate_weight * rate
         metrics = {"loss": loss, "load_balance": aux["load_balance"],
-                   "router_z": aux["router_z"]}
+                   "router_z": aux["router_z"], "wire_rate_bits": rate}
         return total, metrics
     return loss_fn
 
@@ -64,7 +68,8 @@ def make_train_step(built: M.BuiltModel, opt_cfg: AdamWConfig,
 
             zeros_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            zeros_m = {"loss": 0.0, "load_balance": 0.0, "router_z": 0.0}
+            zeros_m = {"loss": 0.0, "load_balance": 0.0, "router_z": 0.0,
+                       "wire_rate_bits": 0.0}
             (g_sum, total, m_sum), _ = jax.lax.scan(
                 body, (zeros_g, 0.0, zeros_m), micro)
             grads = jax.tree.map(lambda g: g / accum_steps, g_sum)

@@ -62,6 +62,36 @@ def test_butterfly_restore_norm_vs_ref(T, d, d_r):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("T,d,d_r", [(32, 128, 8),     # kernel grid path
+                                     (100, 128, 16),   # padded grid (count fix)
+                                     (4, 128, 16)])    # decode-row fast path
+@pytest.mark.parametrize("bits", [8, 4])
+def test_butterfly_reduce_quant_bincount(T, d, d_r, bits):
+    """Fused quantize+per-channel-bincount: codes/scales bitwise-identical
+    to the plain fused quantize, counts bitwise vs the host histogram
+    oracle (including the padded-grid correction), eager ref within the
+    repo's usual quant tolerance."""
+    from repro.core import wire_codec
+    k1, k2 = jax.random.split(jax.random.key(9))
+    x = jax.random.normal(k1, (T, d), jnp.float32)
+    w = jax.random.normal(k2, (d, d_r), jnp.float32) * 0.05
+    codes, scales, counts = ops.butterfly_reduce_quant_bincount(
+        x, w, bits=bits, block_t=32)
+    codes_p, scales_p = ops.butterfly_reduce_quant(x, w, bits=bits,
+                                                   block_t=32)
+    assert np.array_equal(np.asarray(codes), np.asarray(codes_p))
+    assert np.array_equal(np.asarray(scales), np.asarray(scales_p))
+    assert np.array_equal(np.asarray(counts),
+                          wire_codec.channel_counts(np.asarray(codes), bits))
+    assert int(np.asarray(counts).sum()) == T * d_r
+    codes_r, scales_r, counts_r = ref.butterfly_reduce_quant_bincount_ref(
+        x, w, bits=bits)
+    assert np.array_equal(np.asarray(codes), np.asarray(codes_r))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r),
+                               rtol=1e-5, atol=1e-7)
+    assert np.array_equal(np.asarray(counts), np.asarray(counts_r))
+
+
 def test_butterfly_roundtrip_error_bound():
     """|x - deq(quant(x))| <= scale/2 per element (symmetric rounding)."""
     x = jax.random.normal(jax.random.key(2), (64, 128), jnp.float32)

@@ -1,0 +1,148 @@
+"""Entropy wire codec (core/wire_codec.py): exact round-trips under
+friendly and adversarial priors, rate estimation vs the real encoder, the
+progressive bitplane schedule, and the differentiable rate term."""
+import numpy as np
+import pytest
+
+from repro.core import wire_codec as wc
+
+
+def _codes(shape, bits, seed, spread=3.0):
+    """Roughly-Gaussian signed codes, the shape butterfly rows produce."""
+    rng = np.random.default_rng(seed)
+    qmax = 2 ** (bits - 1) - 1
+    c = np.round(rng.normal(0.0, qmax / spread, size=shape))
+    return np.clip(c, -qmax - 1, qmax).astype(np.int8)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("d_r", [1, 16, 32])
+@pytest.mark.parametrize("T", [0, 1, 7, 256])
+def test_roundtrip_data_prior(bits, d_r, T):
+    codes = _codes((T, d_r), bits, seed=T * 100 + d_r)
+    prior = wc.WirePrior.from_counts(wc.channel_counts(codes, bits), bits)
+    data = wc.encode(codes, prior)
+    back = wc.decode(data, prior, codes.shape)
+    assert np.array_equal(back, codes)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_roundtrip_default_prior(bits):
+    codes = _codes((64, 16), bits, seed=3)
+    prior = wc.WirePrior.default(16, bits)
+    back = wc.decode(wc.encode(codes, prior), prior, codes.shape)
+    assert np.array_equal(back, codes)
+
+
+def test_roundtrip_mismatched_prior():
+    """Adversarial: the prior was fit on DIFFERENT data (every symbol still
+    has freq >= 1 by construction), so coding is inefficient but exact."""
+    codes = _codes((128, 8), 8, seed=11, spread=1.2)
+    other = _codes((128, 8), 8, seed=99, spread=20.0)   # near-degenerate
+    prior = wc.WirePrior.from_counts(wc.channel_counts(other, 8), 8)
+    data = wc.encode(codes, prior)
+    assert np.array_equal(wc.decode(data, prior, codes.shape), codes)
+    # mismatch costs bytes relative to the matched prior, never correctness
+    matched = wc.WirePrior.from_counts(wc.channel_counts(codes, 8), 8)
+    assert len(data) >= len(wc.encode(codes, matched))
+
+
+def test_degenerate_single_symbol_source():
+    """All-zero codes compress to near the per-payload overhead floor."""
+    codes = np.zeros((128, 8), np.int8)
+    prior = wc.WirePrior.from_counts(wc.channel_counts(codes, 8), 8)
+    data = wc.encode(codes, prior)
+    assert np.array_equal(wc.decode(data, prior, codes.shape), codes)
+    raw_int8 = codes.size
+    assert len(data) < raw_int8 / 4
+    assert len(data) >= wc.payload_overhead_bytes(8)
+
+
+def test_uniform_source_bounded_expansion():
+    """Uniform random codes are incompressible: the coded stream must stay
+    within the rANS per-symbol slack plus the fixed payload overhead."""
+    rng = np.random.default_rng(7)
+    codes = rng.integers(-128, 128, size=(256, 16)).astype(np.int8)
+    prior = wc.WirePrior.from_counts(wc.channel_counts(codes, 8), 8)
+    data = wc.encode(codes, prior)
+    assert np.array_equal(wc.decode(data, prior, codes.shape), codes)
+    assert len(data) <= codes.size * 1.02 + wc.payload_overhead_bytes(16) + 16
+
+
+def test_corrupt_stream_rejected():
+    codes = _codes((32, 8), 8, seed=5)
+    prior = wc.WirePrior.from_counts(wc.channel_counts(codes, 8), 8)
+    data = bytearray(wc.encode(codes, prior))
+    data[:4] = (9999).to_bytes(4, "little")   # lie about the row count
+    with pytest.raises(ValueError):
+        wc.decode(bytes(data), prior, (9999, 8))
+
+
+def test_estimate_tracks_actual():
+    """estimate_coded_bytes (the fused kernel's consumer) stays within a
+    few percent of the real encoder."""
+    codes = _codes((256, 32), 8, seed=21)
+    prior = wc.WirePrior.from_counts(wc.channel_counts(codes, 8), 8)
+    actual = len(wc.encode(codes, prior))
+    est = wc.estimate_coded_bytes(wc.channel_counts(codes, 8), prior)
+    assert abs(est - actual) / actual < 0.05
+
+
+def test_predicted_code_bytes_deterministic():
+    """The planner's nominal-rate prediction is pure integer math (replay
+    byte-identity depends on it) and monotone in the symbol count."""
+    vals = [wc.predicted_code_bytes(n) for n in range(0, 4096, 17)]
+    assert all(isinstance(v, int) for v in vals)
+    assert vals == sorted(vals)
+    # 3.5 bits/symbol nominal rate
+    assert wc.predicted_code_bytes(16) == 7
+
+
+def test_coarse_refine_schedule():
+    codes = _codes((64, 16), 8, seed=13)
+    coarse = wc.coarse_codes(codes)
+    # refinement is confined to the low planes: adding it back is exact
+    assert np.array_equal(coarse + (codes - coarse), codes)
+    shift = 8 - wc.COARSE_BITS
+    assert np.all(np.abs(codes.astype(np.int64) -
+                         coarse.astype(np.int64)) < (1 << shift))
+    c, r = wc.split_coarse_refine(1000, 64)
+    assert c + r >= 1000 + 64          # the split never invents compression
+    assert c >= 64                     # scales always ride with the coarse chunk
+
+
+def test_rate_bits_differentiable():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    r = jax.random.normal(jax.random.key(0), (32, 16), jnp.float32)
+    val = wc.rate_bits(r, bits=8)
+    assert np.isfinite(float(val))
+    g = jax.grad(lambda x: wc.rate_bits(x, bits=8))(r)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+def test_roundtrip_property_based():
+    """Hypothesis sweep over shapes/bit-widths/distributions (skipped when
+    hypothesis isn't in the environment)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        T=st.integers(min_value=0, max_value=40),
+        d_r=st.integers(min_value=1, max_value=24),
+        bits=st.sampled_from([4, 8]),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+        spread=st.floats(min_value=0.3, max_value=30.0,
+                         allow_nan=False, allow_infinity=False),
+    )
+    @hyp.settings(max_examples=40, deadline=None)
+    def inner(T, d_r, bits, seed, spread):
+        codes = _codes((T, d_r), bits, seed=seed, spread=spread)
+        prior = wc.WirePrior.from_counts(wc.channel_counts(codes, bits),
+                                         bits)
+        assert np.array_equal(
+            wc.decode(wc.encode(codes, prior), prior, codes.shape), codes)
+
+    inner()
